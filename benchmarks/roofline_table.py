@@ -1,0 +1,30 @@
+"""Regenerate the EXPERIMENTS.md §Roofline table from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+      [--artifacts artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    from repro.roofline import analysis as A
+    rows = A.load_all(args.artifacts, args.mesh)
+    print(A.HEADER)
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        print(r.row())
+    print()
+    n_dom = {}
+    for r in rows:
+        n_dom[r.dominant] = n_dom.get(r.dominant, 0) + 1
+    print(f"# {len(rows)} cells; dominant terms: {n_dom}")
+
+
+if __name__ == "__main__":
+    main()

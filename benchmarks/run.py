@@ -1,0 +1,147 @@
+"""Benchmark runner: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig9] [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows and a paper-claims validation
+summary (ratios, not absolute Kops -- see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer ops per benchmark")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_benchmarks as P
+    names = list(P.ALL) if not args.only else args.only.split(",")
+    rows = []
+    print("name,us_per_call,derived")
+    for nm in names:
+        fn = P.ALL[nm]
+        t0 = time.time()
+        kw = {}
+        if args.quick:
+            import inspect
+            sig = inspect.signature(fn)
+            if "n_ops" in sig.parameters:
+                kw["n_ops"] = 4000
+        out = fn(**kw)
+        for row in out:
+            print(row)
+            sys.stdout.flush()
+            rows.append(row)
+        print(f"# {nm} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    _validate(rows)
+
+
+def _parse(rows):
+    out = {}
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        d = dict(kv.split("=") for kv in derived.split(";") if "=" in kv)
+        d["us_per_call"] = float(us)
+        out[name] = {k: float(v) for k, v in d.items()}
+    return out
+
+
+def _validate(rows):
+    """Paper-claims checks (ratios).  Printed, not asserted -- EXPERIMENTS.md
+    records the outcomes."""
+    d = _parse(rows)
+    print("\n# --- paper-claim validation ---")
+
+    def claim(name, cond, detail):
+        status = "PASS" if cond else "MISS"
+        print(f"# [{status}] {name}: {detail}")
+
+    if "fig6-approx-msc" in d and "fig6-rocksdb" in d:
+        pr, ap_, rk = (d.get("fig6-precise-msc"), d["fig6-approx-msc"],
+                       d["fig6-rocksdb"])
+        if pr:
+            claim("fig6: precise-MSC slow-write I/O < LSM (paper ~4x at "
+                  "100M-key scale; ratio grows with fanout)",
+                  pr["slow_write_objs"] < rk["slow_write_objs"],
+                  f"precise={pr['slow_write_objs']:.0f} "
+                  f"lsm={rk['slow_write_objs']:.0f} "
+                  f"ratio={rk['slow_write_objs'] / max(pr['slow_write_objs'], 1):.2f}x")
+            claim("fig6: approx ~ precise on slow-write I/O",
+                  ap_["slow_write_objs"] < 2.0 * pr["slow_write_objs"],
+                  f"approx={ap_['slow_write_objs']:.0f} "
+                  f"precise={pr['slow_write_objs']:.0f}")
+            claim("fig6: approx throughput >= ~precise (paper 2.5x; at sim "
+                  "scale the vectorized precise path is not CPU-bound, see "
+                  "fig6cpu for the CPU claim)",
+                  ap_["kops"] > 0.7 * pr["kops"],
+                  f"approx={ap_['kops']:.1f} precise={pr['kops']:.1f} kops")
+
+    if "fig6-score-precise" in d:
+        sp = d["fig6-score-precise"]["per_selection_us"]
+        sa = d["fig6-score-approx"]["per_selection_us"]
+        claim("fig6cpu: approx-MSC selection CPU << precise (paper ~15x)",
+              sa < sp / 4,
+              f"approx={sa:.0f}us precise={sp:.0f}us ratio={sp / sa:.1f}x")
+
+    if "tbl2-het-prism" in d:
+        t = d
+        claim("table2: het-prism > het-lsm throughput (paper ~2x)",
+              t["tbl2-het-prism"]["kops"] > t["tbl2-het-lsm"]["kops"],
+              f"prism={t['tbl2-het-prism']['kops']:.1f} "
+              f"lsm={t['tbl2-het-lsm']['kops']:.1f}")
+        claim("table2: het-lsm between qlc-only and nvm-only",
+              t["tbl2-qlc-only"]["kops"] < t["tbl2-het-lsm"]["kops"]
+              < t["tbl2-nvm-only"]["kops"],
+              f"qlc={t['tbl2-qlc-only']['kops']:.1f} "
+              f"het={t['tbl2-het-lsm']['kops']:.1f} "
+              f"nvm={t['tbl2-nvm-only']['kops']:.1f}")
+
+    fig8 = {k: v for k, v in d.items() if k.startswith("fig8")}
+    if fig8:
+        ok = all(d[f"fig8-prism-het{p}"]["kops"]
+                 >= d[f"fig8-lsm-het{p}"]["kops"]
+                 for p in (5, 12, 25, 50)
+                 if f"fig8-prism-het{p}" in d and f"fig8-lsm-het{p}" in d)
+        claim("fig8: prism >= lsm at every fast-tier share", ok,
+              "; ".join(f"het{p}: {d[f'fig8-prism-het{p}']['kops']:.1f}"
+                        f" vs {d[f'fig8-lsm-het{p}']['kops']:.1f}"
+                        for p in (5, 12, 25, 50)
+                        if f"fig8-prism-het{p}" in d))
+
+    if "fig11b-promote" in d:
+        claim("fig11b: promotions raise fast-read ratio on YCSB-C",
+              d["fig11b-promote"]["fast_read_ratio"]
+              > d["fig11b-no-promote"]["fast_read_ratio"],
+              f"promote={d['fig11b-promote']['fast_read_ratio']:.3f} "
+              f"no={d['fig11b-no-promote']['fast_read_ratio']:.3f}")
+
+    fig12 = sorted((k, v) for k, v in d.items() if k.startswith("fig12"))
+    if len(fig12) >= 3:
+        k1 = d.get("fig12-k1")
+        k8 = d.get("fig12-k8")
+        if k1 and k8:
+            claim("fig12: k=8 lowers slow-write I/O vs k=1 (paper Fig.12)",
+                  k8["slow_write_objs"] <= k1["slow_write_objs"],
+                  f"k1={k1['slow_write_objs']:.0f} "
+                  f"k8={k8['slow_write_objs']:.0f}")
+
+    fig9 = {k: v for k, v in d.items() if k.startswith("fig9")}
+    if fig9:
+        wins = sum(1 for wk in "ABCDF"
+                   if f"fig9-prism-ycsb{wk}" in d
+                   and all(d[f"fig9-prism-ycsb{wk}"]["kops"]
+                           >= d.get(f"fig9-{v}-ycsb{wk}",
+                                    {"kops": 0})["kops"]
+                           for v in ("lsm", "ra", "mutant")))
+        claim("fig9: prism wins point-query workloads vs all baselines",
+              wins >= 4, f"prism best on {wins}/5 workloads")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Serving example: batched requests through the tiered-KV engine.
+
+  PYTHONPATH=src python examples/serve_tiered.py
+
+Runs a small dense model behind the continuous-batching engine with a
+deliberately small HBM page pool, so the PrismDB machinery works visibly:
+cold pages demote into host runs, Quest-selected hot pages stay resident,
+re-heated pages promote back.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.core.paged_kv import PagedKVConfig
+from repro.models import model as M
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    mcfg = reduced(get_arch("phi4-mini-3.8b"))
+    params, _ = M.init_params(mcfg, jax.random.PRNGKey(0))
+    kv_cfg = PagedKVConfig(
+        n_layers=mcfg.n_layers, kv_heads=mcfg.n_kv_heads,
+        head_dim=mcfg.head_dim, page_tokens=8,
+        fast_pages=40,              # deliberately small: forces tiering
+        slow_pages=1024, max_seqs=4, max_pages_per_seq=32,
+        topk_pages=8, recent_pages=2, dtype="float32")
+    eng = ServeEngine(mcfg, kv_cfg, params)
+
+    rng = np.random.default_rng(0)
+    n_req = 10
+    for i in range(n_req):
+        eng.submit(Request(rid=i,
+                           prompt=list(rng.integers(1, mcfg.vocab, 64)),
+                           max_new=24))
+    t0 = time.time()
+    ticks = eng.run()
+    dt = time.time() - t0
+
+    c = eng.counters
+    total_reads = max(c["hits_fast"] + c["hits_slow"], 1)
+    print(f"served {n_req} requests ({ticks} engine ticks, {dt:.1f}s)")
+    print(f"compactions: {eng.stats['compactions']}  "
+          f"pages demoted: {c['demoted']}  promoted: {c['promoted']}")
+    print(f"page reads  : {total_reads} "
+          f"({100 * c['hits_fast'] / total_reads:.1f}% from HBM pool, "
+          f"{100 * c['hits_slow'] / total_reads:.1f}% from host runs)")
+    print(f"host-link traffic: "
+          f"{(c['slow_reads'] + c['slow_writes'])} pages, all sequential "
+          f"runs (the paper's compaction I/O discipline)")
+    assert eng.stats["retired"] == n_req
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""The paper's own configuration: PrismDB as a tiered KV store.
+
+Matches §7 of the paper scaled to simulation: 1:5 NVM:QLC capacity ratio,
+tracker = 10% of key space, pinning threshold 0.7, power-of-8 range
+selection, 2-bit clock.  Used by the benchmark suite (Tables 2/5,
+Figs 6/8-12) and by the serving engine's paged-KV tiering.
+"""
+from repro.core.tiers import TierConfig
+
+def paper_tier_config(scale: int = 1) -> TierConfig:
+    """scale=1 ~ 64k keys; the paper's 100M-key setup divides by ~1500."""
+    base = 1 << 16
+    ks = base * scale
+    fast = ks // 9           # ~11% on fast tier (paper's het10)
+    return TierConfig(
+        key_space=ks,
+        fast_slots=fast,
+        slow_slots=ks,
+        value_width=4,
+        value_bytes=1024,          # 1 KB objects (paper §7)
+        max_runs=max(ks // 2048, 64),
+        run_size=2048,
+        bloom_bits_per_run=1 << 15,
+        tracker_slots=ks // 10,    # 10% of key space (paper §7)
+        n_buckets=256,
+        pin_threshold=0.7,         # paper §7
+        power_k=8,                 # paper §A.1
+    )

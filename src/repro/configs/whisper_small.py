@@ -1,0 +1,17 @@
+"""Whisper-small [arXiv:2212.04356]: encoder-decoder, conv frontend STUB.
+
+12L enc + 12L dec, d_model=768 12H d_ff=3072 vocab=51865.  input_specs()
+supplies precomputed mel-frame embeddings [B, 1500, 768] (the 2x conv1d
+stem is the stub).  Decoder decode shapes lower the DECODER step; encoder
+has no decode.  Full attention -> long_500k skipped.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab=51865, pattern=("attn",), window_pattern=(-1,),
+    ffn_kind="mlp", act="gelu", norm_kind="ln", norm_eps=1e-5,
+    enc_layers=12, enc_seq=1500, embed_inputs=True, tie_embeddings=True,
+    long_context_ok=False, source="arXiv:2212.04356",
+))

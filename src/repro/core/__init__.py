@@ -1,0 +1,15 @@
+"""PrismDB's contribution in JAX: tiered storage with MSC compactions.
+
+Layers:
+  utils / bloom          -- primitives
+  tracker / mapper       -- popularity tracking + pinning threshold (§4.3)
+  tiers                  -- hybrid two-tier data layout (§4.1)
+  msc                    -- multi-tiered storage compaction metric (§5)
+  compaction             -- the compaction engine (§5.3, §6)
+  policy                 -- read-triggered compaction state machine (§5.3)
+  db                     -- client facade + shared-nothing partitions
+  paged_kv               -- tiered paged KV-cache built on the core (ours)
+  embedding_store        -- tiered embedding table for huge vocabs (ours)
+"""
+from repro.core.tiers import TierConfig, TierState  # noqa: F401
+from repro.core.db import PrismDB, PartitionedDB    # noqa: F401

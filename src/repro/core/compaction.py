@@ -1,0 +1,315 @@
+"""Compaction engine (PrismDB §4.2, §5.3, §6).
+
+One compaction:
+  1. select a key range with power-of-k + MSC (precise or approx);
+  2. read the range's fast-tier objects; pin the popular ones (mapper),
+     demote the rest (tombstones always demote = delete the slow copy);
+  3. read the overlapping slow-tier run window (whole runs: sequential I/O);
+     drop run objects superseded by *any* live fast copy (stale cleaning);
+  4. optionally promote hot run objects to the fast tier (paper: promotion
+     piggybacks on the read the compaction already paid for);
+  5. merge-sort survivors + demotions into a fresh run (append to the log),
+     free the old runs' slots and the demoted fast slots, rebuild indices,
+     new Bloom filter, update tracker location bits + bucket stats.
+
+Everything static-shape; ``cap_fast``/``cap_slow`` bound the per-compaction
+working set exactly like the paper bounds compaction size by SST file bounds.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom, mapper, msc, tracker
+from repro.core.tiers import (Counters, TierConfig, TierState, bucket_of,
+                              fast_occupancy)
+from repro.core.utils import (PADKEY, alloc_slots, build_sorted_index,
+                              segment_in_range, sorted_lookup)
+
+
+class Movement(NamedTuple):
+    """Physical data movement of one compaction, for payload mirrors.
+
+    The core tracks keys/placement; payload arrays (KV pages, embedding
+    rows) live outside and replay these moves (the tier_compact kernel's
+    job on TPU).  All arrays static-size, masked by *_valid.
+    """
+    m_src_tier: jax.Array   # i32[cap_f+cap_s] 0=fast 1=slow (merged writes)
+    m_src_slot: jax.Array   # i32[cap_f+cap_s] source slot in its tier
+    m_dst_slot: jax.Array   # i32[cap_f+cap_s] destination slow-tier slot
+    m_valid: jax.Array      # bool
+    p_src_slot: jax.Array   # i32[cap_s] promotion source (slow tier)
+    p_dst_slot: jax.Array   # i32[cap_s] promotion destination (fast tier)
+    p_valid: jax.Array      # bool
+
+
+class CompactionStats(NamedTuple):
+    selected_lo: jax.Array
+    selected_hi: jax.Array
+    score: jax.Array
+    n_demoted: jax.Array
+    n_promoted: jax.Array
+    n_merged: jax.Array
+    n_run_read: jax.Array      # slow objects read (whole window, seq I/O)
+    n_run_written: jax.Array   # slow objects written (new runs, seq I/O)
+
+
+def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
+                 promote: bool = True, precise: bool = False,
+                 cap_fast: int | None = None,
+                 cap_slow: int | None = None,
+                 with_movement: bool = False,
+                 force_pin_keys: jax.Array | None = None,
+                 selection: str = "msc",
+                 pin_mode: str = "object"):
+    """One compaction.
+
+    ``force_pin_keys``: optional sorted int32 array of keys that must never
+    demote (e.g. a paged-KV sequence's mutable tail page, or rows dirtied by
+    the current optimizer step).  The paper's analogue is the memtable /
+    in-flight version check done under the partition lock (§6).
+
+    Baseline knobs (benchmarks, paper §3/§7):
+      selection: "msc" | "min_overlap" (RocksDB kMinOverlappingRatio)
+      pin_mode:  "object" (PrismDB) | "none" (LSM: demote everything) |
+                 "file" (Mutant: whole-range all-or-nothing placement)
+    """
+    cap_fast = cap_fast or 2 * cfg.run_size
+    cap_slow = cap_slow or 2 * cfg.run_size * max(cfg.range_fanout_i, 1)
+    r_sel, r_pin, r_pro = jax.random.split(rng, 3)
+
+    cand, scores, best = msc.select_range(state, cfg, r_sel, precise=precise,
+                                          cap_fast=cap_fast,
+                                          cap_slow=cap_slow,
+                                          selection=selection)
+    lo, hi = cand.lo[best], cand.hi[best]
+    run_start, run_span = cand.run_start[best], cand.run_span[best]
+
+    hist = tracker.clock_histogram(state.tracker)
+    # capacity guard (beyond-paper; the paper defers threshold tuning to
+    # future work): the pin budget must leave headroom below fast capacity,
+    # else compactions cannot free space and the system death-spirals when
+    # tracked_keys * threshold > fast_slots (e.g. a 5% fast tier).
+    tracked_total = jnp.maximum(jnp.sum(hist).astype(jnp.float32), 1.0)
+    cap_frac = 0.6 * cfg.fast_slots / tracked_total
+    threshold = jnp.minimum(jnp.float32(cfg.pin_threshold), cap_frac)
+    probs = mapper.pin_probabilities(hist, threshold)
+
+    # ---- fast-tier range: pin or demote --------------------------------
+    fpos, fm = segment_in_range(state.fidx_keys, lo, hi, cap_fast)
+    fkeys = jnp.where(fm, state.fidx_keys[fpos], PADKEY)
+    fslots = jnp.where(fm, state.fidx_slots[fpos], 0)
+    tomb = state.fast_ver[fslots] < 0
+    clock, tracked = tracker.lookup_clock(state.tracker, fkeys)
+    if pin_mode == "none":
+        pinned = jnp.zeros_like(fm)
+    elif pin_mode == "file":
+        # Mutant-style file granularity: the whole range stays hot iff its
+        # average pin probability crosses 1/2 (single placement decision
+        # per file -- the coarseness the paper criticizes in §7.1).
+        per_obj = probs[jnp.clip(clock.astype(jnp.int32), 0, 3)] \
+            * tracked.astype(jnp.float32)
+        avg = jnp.sum(jnp.where(fm, per_obj, 0.0)) \
+            / jnp.maximum(jnp.sum(fm.astype(jnp.float32)), 1.0)
+        pinned = fm & ~tomb & (avg >= 0.5)
+    else:
+        pinned = mapper.pin_decisions(clock, tracked, probs, r_pin) \
+            & fm & ~tomb
+    if force_pin_keys is not None:
+        pos_f = jnp.clip(jnp.searchsorted(force_pin_keys, fkeys), 0,
+                         force_pin_keys.shape[0] - 1)
+        forced = force_pin_keys[pos_f] == fkeys
+        pinned = pinned | (forced & fm & ~tomb)
+    demote = fm & ~pinned                 # tombstones always leave fast tier
+    demote_data = demote & ~tomb          # tombstones carry no payload
+
+    # ---- slow-tier window ----------------------------------------------
+    spos, sm = segment_in_range(state.sidx_keys, lo, hi, cap_slow)
+    skeys = jnp.where(sm, state.sidx_keys[spos], PADKEY)
+    sslots = jnp.where(sm, state.sidx_slots[spos], 0)
+    _, in_fast = sorted_lookup(state.fidx_keys, state.fidx_slots, skeys)
+    superseded = in_fast & sm             # any live fast copy (or tombstone)
+
+    # ---- free demoted fast slots, then install promotions ----------------
+    # Promotions (paper §4.2): the compaction already paid the run read, so
+    # hot slow-tier objects may ride back to the fast tier.  Two guards keep
+    # promotion from fighting demotion: (a) only objects whose whole clock
+    # class fits in the pin budget (the hottest class, typically clock=3);
+    # (b) never promote more than this compaction demoted, so compactions
+    # monotonically free space.  Allocation happens BEFORE the merge set is
+    # fixed: a failed allocation keeps the object in the new run (no loss).
+    nf = state.fast_keys.shape[0]
+    ftgt = jnp.where(demote, fslots, nf)
+    fast_keys = state.fast_keys.at[ftgt].set(-1, mode="drop")
+    fast_ver = state.fast_ver.at[ftgt].set(0, mode="drop")
+
+    n_dem_total = jnp.sum(demote.astype(jnp.int32))
+    sclock, stracked = tracker.lookup_clock(state.tracker, skeys)
+    fully_pinned = probs[jnp.clip(sclock.astype(jnp.int32), 0, 3)] >= 0.999
+    promote_want = (sm & ~superseded & stracked & fully_pinned
+                    & (sclock >= cfg.promote_min_clock)) if promote \
+        else jnp.zeros_like(sm)
+    rank = jnp.cumsum(promote_want.astype(jnp.int32)) - 1
+    promote_want = promote_want & (rank < n_dem_total)
+    pro_slots = alloc_slots(fast_keys, promote_want)
+    pro_ok = promote_want & (pro_slots >= 0)
+    ptgt = jnp.where(pro_ok, pro_slots, nf)
+    fast_keys = fast_keys.at[ptgt].set(skeys, mode="drop")
+    fast_vals = state.fast_vals.at[ptgt].set(state.slow_vals[sslots],
+                                             mode="drop")
+    fast_ver = fast_ver.at[ptgt].set(1, mode="drop")
+    fidx_keys, fidx_slots = build_sorted_index(fast_keys)
+
+    survive = sm & ~superseded & ~pro_ok
+
+    # ---- merge (sorted; PADKEY sorts to the tail) ------------------------
+    mkeys = jnp.concatenate([jnp.where(demote_data, fkeys, PADKEY),
+                             jnp.where(survive, skeys, PADKEY)])
+    mvals = jnp.concatenate([state.fast_vals[fslots], state.slow_vals[sslots]])
+    order = jnp.argsort(mkeys)
+    mkeys, mvals = mkeys[order], mvals[order]
+    mvalid = mkeys != PADKEY
+    n_merged = jnp.sum(mvalid.astype(jnp.int32))
+
+    # ---- free the window runs' slots -------------------------------------
+    r = cfg.max_runs
+    # map window positions in lo-order back to run ids
+    lo_key = jnp.where(state.run_active, state.run_lo, PADKEY)
+    order_runs = jnp.argsort(lo_key)
+    pos_in_order = jnp.searchsorted(lo_key[order_runs], state.run_lo[
+        jnp.clip(run_start, 0, r - 1)])
+    win_pos = pos_in_order + jnp.arange(cfg.range_fanout_i, dtype=jnp.int32)
+    win_rids = jnp.where(
+        (run_start >= 0) & (jnp.arange(cfg.range_fanout_i) < run_span),
+        order_runs[jnp.clip(win_pos, 0, r - 1)], r).astype(jnp.int32)
+
+    in_window = jnp.any(state.slow_run[:, None] == win_rids[None, :], axis=1)
+    slow_keys = jnp.where(in_window, -1, state.slow_keys)
+    slow_run = jnp.where(in_window, -1, state.slow_run)
+
+    # ---- write the merged output as sub-runs of <= run_size --------------
+    # (the paper writes "new SST file(s)": splitting keeps run sizes bounded)
+    m_total = mkeys.shape[0]
+    n_sub = max(m_total // cfg.run_size, 1) + 1
+    rank = jnp.cumsum(mvalid.astype(jnp.int32)) - 1          # rank among valid
+    sub_of = jnp.where(mvalid, rank // cfg.run_size, n_sub - 1).astype(jnp.int32)
+
+    new_slots = alloc_slots(slow_keys, mvalid)
+    wrote = mvalid & (new_slots >= 0)
+    stgt = jnp.where(wrote, new_slots, slow_keys.shape[0])
+    slow_keys = slow_keys.at[stgt].set(mkeys, mode="drop")
+    slow_vals = state.slow_vals.at[stgt].set(mvals, mode="drop")
+
+    run_active = state.run_active.at[win_rids].set(False, mode="drop")
+    run_count = state.run_count.at[win_rids].set(0, mode="drop")
+    run_lo = state.run_lo
+    run_hi = state.run_hi
+    free_rids = jnp.nonzero(~run_active, size=n_sub, fill_value=r)[0] \
+        .astype(jnp.int32)
+    slow_run = slow_run.at[stgt].set(free_rids[jnp.clip(sub_of, 0, n_sub - 1)],
+                                     mode="drop")
+    sidx_keys, sidx_slots = build_sorted_index(slow_keys)
+
+    # per-sub-run counts and key bounds
+    sub_counts = jnp.zeros((n_sub,), jnp.int32).at[sub_of].add(
+        wrote.astype(jnp.int32))
+    sub_first = jnp.full((n_sub,), PADKEY, jnp.int32).at[sub_of].min(
+        jnp.where(wrote, mkeys, PADKEY))
+    # sub-run j owns [first_j (or lo for j=0), first_{j+1}) ; last owns to hi
+    sub_lo = jnp.where(jnp.arange(n_sub) == 0, lo, sub_first)
+    nxt_first = jnp.concatenate([sub_first[1:], jnp.array([PADKEY], jnp.int32)])
+    sub_hi = jnp.minimum(nxt_first, hi)
+    sub_ok = sub_counts > 0
+    dir_tgt = jnp.where(sub_ok, free_rids, r)
+    run_active = run_active.at[dir_tgt].set(True, mode="drop")
+    run_lo = run_lo.at[dir_tgt].set(sub_lo, mode="drop")
+    run_hi = run_hi.at[dir_tgt].set(sub_hi, mode="drop")
+    run_count = run_count.at[dir_tgt].set(sub_counts, mode="drop")
+    blooms = state.blooms
+    for j in range(n_sub):                 # static unroll: n_sub is small
+        blooms = jax.lax.cond(
+            sub_ok[j],
+            lambda bl: bloom.set_run(bl, free_rids[j], mkeys,
+                                     wrote & (sub_of == j)),
+            lambda bl: bl, blooms)
+
+    # ---- tracker location bits ------------------------------------------
+    trk = tracker.set_location(state.tracker, fkeys,
+                               jnp.full(fkeys.shape, 1, jnp.int8), demote)
+    trk = tracker.set_location(trk, skeys, jnp.full(skeys.shape, 0, jnp.int8),
+                               pro_ok)
+
+    # ---- bucket statistics ----------------------------------------------
+    nb = cfg.n_buckets
+    fb = bucket_of(cfg, fkeys)
+    sb = bucket_of(cfg, skeys)
+    mb = bucket_of(cfg, mkeys)
+    bucket_fast = state.bucket_fast
+    bucket_fast = bucket_fast.at[jnp.where(demote, fb, nb)].add(-1, mode="drop")
+    bucket_fast = bucket_fast.at[jnp.where(pro_ok, sb, nb)].add(1, mode="drop")
+    bucket_slow = state.bucket_slow
+    bucket_slow = bucket_slow.at[jnp.where(sm, sb, nb)].add(-1, mode="drop")
+    bucket_slow = bucket_slow.at[jnp.where(wrote, mb, nb)].add(1, mode="drop")
+    # overlaps within [lo, hi) are fully resolved by the merge
+    b_width = max(cfg.key_space // nb, 1)
+    edges_lo = jnp.arange(nb, dtype=jnp.int32) * b_width
+    cover = jnp.clip((jnp.minimum(edges_lo + b_width, hi)
+                      - jnp.maximum(edges_lo, lo)).astype(jnp.float32)
+                     / float(b_width), 0.0, 1.0)
+    bucket_overlap = (state.bucket_overlap.astype(jnp.float32)
+                      * (1.0 - cover)).astype(jnp.int32)
+
+    # ---- counters (object units; bytes derived at report time) -----------
+    t_f = jnp.sum(sm.astype(jnp.int32))
+    n_dem = jnp.sum(demote_data.astype(jnp.int32))
+    n_pro = jnp.sum(pro_ok.astype(jnp.int32))
+    ctr = state.ctr._replace(
+        compactions=state.ctr.compactions + 1,
+        demoted=state.ctr.demoted + n_dem,
+        promoted=state.ctr.promoted + n_pro,
+        slow_reads=state.ctr.slow_reads + t_f,
+        slow_writes=state.ctr.slow_writes + n_merged,
+        fast_reads=state.ctr.fast_reads + n_dem,
+        fast_writes=state.ctr.fast_writes + n_pro,
+        rate_limited=state.ctr.rate_limited
+        + jnp.sum((mvalid & ~wrote).astype(jnp.int32)),
+    )
+
+    stats = CompactionStats(
+        selected_lo=lo, selected_hi=hi, score=scores[best],
+        n_demoted=n_dem, n_promoted=n_pro, n_merged=n_merged,
+        n_run_read=t_f, n_run_written=n_merged)
+
+    new_state = state._replace(
+        fast_keys=fast_keys, fast_vals=fast_vals, fast_ver=fast_ver,
+        fidx_keys=fidx_keys, fidx_slots=fidx_slots,
+        slow_keys=slow_keys, slow_vals=slow_vals, slow_run=slow_run,
+        sidx_keys=sidx_keys, sidx_slots=sidx_slots,
+        run_lo=run_lo, run_hi=run_hi, run_count=run_count,
+        run_active=run_active, blooms=blooms, tracker=trk,
+        bucket_fast=bucket_fast, bucket_slow=bucket_slow,
+        bucket_overlap=bucket_overlap, ctr=ctr)
+    if not with_movement:
+        return new_state, stats
+    src_tier = jnp.concatenate([jnp.zeros_like(fslots),
+                                jnp.ones_like(sslots)])[order]
+    src_slot = jnp.concatenate([fslots, sslots])[order]
+    mv = Movement(
+        m_src_tier=src_tier.astype(jnp.int32),
+        m_src_slot=src_slot.astype(jnp.int32),
+        m_dst_slot=jnp.where(wrote, new_slots, -1).astype(jnp.int32),
+        m_valid=wrote,
+        p_src_slot=jnp.where(pro_ok, sslots, -1).astype(jnp.int32),
+        p_dst_slot=jnp.where(pro_ok, pro_slots, -1).astype(jnp.int32),
+        p_valid=pro_ok)
+    return new_state, stats, mv
+
+
+def needs_compaction(state: TierState, cfg: TierConfig) -> jax.Array:
+    return fast_occupancy(state) >= cfg.high_watermark
+
+
+def below_low_watermark(state: TierState, cfg: TierConfig) -> jax.Array:
+    return fast_occupancy(state) < cfg.low_watermark

@@ -1,0 +1,226 @@
+"""PrismDB facade: the paper's client interface over the functional core.
+
+``PrismDB`` drives jitted batch ops + watermark/read-triggered compactions
+from Python (the paper's worker/compaction threads).  ``PartitionedDB``
+vmaps the whole store over P shared-nothing partitions (paper §4.1): each
+partition owns a hash slice of the key space with its own tracker, mapper,
+buckets and runs -- zero cross-partition synchronization, exactly the
+paper's design (and how the page pool shards over mesh devices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compaction, policy, tiers
+from repro.core.tiers import TierConfig, TierState
+from repro.core.utils import hash_mod
+
+
+class PrismDB:
+    """Single-partition store. Batched Put/Get/Delete/Scan + compaction."""
+
+    def __init__(self, cfg: TierConfig, seed: int = 0,
+                 pol_cfg: policy.PolicyConfig | None = None,
+                 promote: bool = True, precise: bool = False,
+                 selection: str = "msc", pin_mode: str = "object",
+                 append_only: bool = False):
+        """``append_only`` models LSM semantics for the baselines: every
+        update appends a new version (memtable/L0), so fast-tier space is
+        consumed by total write VOLUME, not unique keys -- compactions must
+        run at write rate.  PrismDB's slab layout updates in place
+        (append_only=False), which is a core §3 advantage.  Implemented as
+        virtual fill accounting; duplicates merge away at compaction."""
+        self.cfg = cfg
+        self.append_only = append_only
+        self._virtual_extra = 0
+        self.state = tiers.init(cfg)
+        self.pol_cfg = pol_cfg or policy.PolicyConfig()
+        self.pol = policy.init()
+        self.rng = jax.random.PRNGKey(seed)
+        self.promote = promote
+        self.precise = precise
+        self._put = jax.jit(functools.partial(tiers.put_batch, cfg=cfg))
+        self._get = jax.jit(functools.partial(tiers.get_batch, cfg=cfg))
+        self._del = jax.jit(functools.partial(tiers.delete_batch, cfg=cfg))
+        self._compact = jax.jit(functools.partial(
+            compaction.compact_once, cfg=cfg, promote=promote,
+            precise=precise, selection=selection, pin_mode=pin_mode))
+        self._needs = jax.jit(functools.partial(
+            compaction.needs_compaction, cfg=cfg))
+        self._below = jax.jit(functools.partial(
+            compaction.below_low_watermark, cfg=cfg))
+        self._free = jax.jit(tiers.free_fast_slots)
+        self._pol_step = jax.jit(functools.partial(
+            policy.step, cfg=self.pol_cfg))
+        self.compaction_log: list = []
+
+    # -- client ops --------------------------------------------------------
+    def put(self, keys, vals=None, valid=None):
+        keys = jnp.asarray(keys, jnp.int32)
+        if vals is None:
+            vals = jnp.broadcast_to(
+                keys[:, None].astype(jnp.float32),
+                (keys.shape[0], self.cfg.value_width))
+        if valid is None:
+            valid = jnp.ones(keys.shape, bool)
+        # rate-limit (paper §4.2): incoming writes stall while the compaction
+        # job frees fast-tier space, so inserts never drop.
+        self._ensure_free(int(keys.shape[0]))
+        before_free = int(self._free(self.state))
+        self.state = self._put(self.state, keys=keys, vals=vals, valid=valid)
+        if self.append_only:
+            # versions appended, not updated: in-place updates still consume
+            # virtual space until the next merge
+            fresh = before_free - int(self._free(self.state))
+            self._virtual_extra += int(keys.shape[0]) - fresh
+        self._maybe_compact()
+
+    def _ensure_free(self, need: int, max_rounds: int = 256):
+        for _ in range(max_rounds):
+            if int(self._free(self.state)) - self._virtual_extra >= need:
+                return
+            self.state, stats = self._compact(self.state, rng=self._split())
+            if self.append_only:
+                # duplicates within the compacted key range merge away
+                frac = (int(stats.selected_hi) - int(stats.selected_lo)) \
+                    / max(self.cfg.key_space, 1)
+                self._virtual_extra = int(self._virtual_extra
+                                          * max(1.0 - frac, 0.0))
+            self.compaction_log.append(jax.tree.map(
+                lambda x: x.item() if hasattr(x, "item") else x, stats))
+
+    def get(self, keys, valid=None):
+        keys = jnp.asarray(keys, jnp.int32)
+        if valid is None:
+            valid = jnp.ones(keys.shape, bool)
+        self.state, vals, found, src = self._get(self.state, keys=keys,
+                                                 valid=valid)
+        self._maybe_read_compact()
+        return vals, found, src
+
+    def delete(self, keys, valid=None):
+        keys = jnp.asarray(keys, jnp.int32)
+        if valid is None:
+            valid = jnp.ones(keys.shape, bool)
+        self.state = self._del(self.state, keys=keys, valid=valid)
+
+    def scan(self, lo: int, n: int):
+        return tiers.scan(self.state, jnp.int32(lo), n)
+
+    # -- compaction drivers -------------------------------------------------
+    def _split(self):
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def _maybe_compact(self, max_rounds: int = 64):
+        if not bool(self._needs(self.state)):
+            return
+        for _ in range(max_rounds):
+            self.state, stats = self._compact(self.state, rng=self._split())
+            self.compaction_log.append(jax.tree.map(
+                lambda x: x.item() if hasattr(x, "item") else x, stats))
+            if bool(self._below(self.state)):
+                break
+
+    def _maybe_read_compact(self):
+        total = self.state.ctr.gets + self.state.ctr.puts
+        self.pol, go = self._pol_step(self.pol, self.state, total_ops=total)
+        if bool(go) and int(self.pol.phase) == policy.ACTIVE:
+            for _ in range(self.pol_cfg.compactions_per_epoch_step):
+                self.state, stats = self._compact(self.state, rng=self._split())
+                self.compaction_log.append(jax.tree.map(
+                    lambda x: x.item() if hasattr(x, "item") else x, stats))
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def counters(self) -> dict:
+        """Object-unit counters + derived byte counters (python ints, no
+        overflow)."""
+        c = {k: int(v) for k, v in self.state.ctr._asdict().items()}
+        vb = self.cfg.value_bytes
+        c["fast_bytes_read"] = c["fast_reads"] * vb
+        c["fast_bytes_written"] = c["fast_writes"] * vb
+        c["slow_bytes_read"] = c["slow_reads"] * vb
+        c["slow_bytes_written"] = c["slow_writes"] * vb
+        return c
+
+    def occupancy(self) -> float:
+        return float(tiers.fast_occupancy(self.state))
+
+
+class PartitionedDB:
+    """Shared-nothing partitions via vmap (paper §4.1, Fig. 11d).
+
+    Keys are routed by hash; every partition executes the same batched step
+    on its own slice (masked for load imbalance within the batch).
+    """
+
+    def __init__(self, cfg: TierConfig, n_partitions: int, seed: int = 0,
+                 promote: bool = True):
+        self.cfg = cfg
+        self.p = n_partitions
+        self.state = jax.vmap(lambda _: tiers.init(cfg))(
+            jnp.arange(n_partitions))
+        self.rng = jax.random.PRNGKey(seed)
+        self.promote = promote
+        self._vput = jax.jit(jax.vmap(
+            functools.partial(tiers.put_batch, cfg=cfg)))
+        self._vget = jax.jit(jax.vmap(
+            functools.partial(tiers.get_batch, cfg=cfg)))
+        self._vcompact = jax.jit(jax.vmap(functools.partial(
+            compaction.compact_once, cfg=cfg, promote=promote)))
+        self._vocc = jax.jit(jax.vmap(tiers.fast_occupancy))
+
+    def route(self, keys: jax.Array, per_part: int):
+        """Scatter a batch into [P, per_part] padded per-partition batches."""
+        part = hash_mod(keys, self.p, salt=4)
+        order = jnp.argsort(part)
+        keys_s, part_s = keys[order], part[order]
+        rank = jnp.arange(keys.shape[0]) - jnp.searchsorted(
+            part_s, part_s, side="left")
+        out = jnp.full((self.p, per_part), -1, jnp.int32)
+        ok = rank < per_part
+        out = out.at[part_s[ok], rank[ok]].set(keys_s[ok])
+        return out, out >= 0
+
+    def put(self, keys):
+        keys = jnp.asarray(keys, jnp.int32)
+        per = max(2 * keys.shape[0] // self.p, 8)
+        routed, valid = self.route(keys, per)
+        vals = jnp.broadcast_to(
+            routed[..., None].astype(jnp.float32),
+            (*routed.shape, self.cfg.value_width))
+        self.state = self._vput(self.state, keys=routed, vals=vals,
+                                valid=valid)
+        self._maybe_compact()
+
+    def get(self, keys):
+        keys = jnp.asarray(keys, jnp.int32)
+        per = max(2 * keys.shape[0] // self.p, 8)
+        routed, valid = self.route(keys, per)
+        self.state, vals, found, src = self._vget(self.state, keys=routed,
+                                                  valid=valid)
+        return vals, found, src
+
+    def _maybe_compact(self, max_rounds: int = 32):
+        occ = self._vocc(self.state)
+        if not bool(jnp.any(occ >= self.cfg.high_watermark)):
+            return
+        for _ in range(max_rounds):
+            self.rng, sub = jax.random.split(self.rng)
+            rngs = jax.random.split(sub, self.p)
+            # every partition compacts in lock-step (idle ones pay a no-op
+            # merge); shared-nothing means no synchronization beyond vmap.
+            self.state, _ = self._vcompact(self.state, rng=rngs)
+            occ = self._vocc(self.state)
+            if not bool(jnp.any(occ >= self.cfg.low_watermark)):
+                break
+
+    @property
+    def counters(self) -> dict:
+        return {k: [int(x) for x in v]
+                for k, v in self.state.ctr._asdict().items()}

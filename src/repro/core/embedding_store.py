@@ -1,0 +1,181 @@
+"""Tiered embedding store: PrismDB's core applied to huge-vocab training.
+
+For the 200k-262k-vocab archs (phi4, gemma3, qwen2-vl), the input embedding
+table is hundreds of MB per device even sharded.  Token frequency is heavily
+zipfian, so we keep the hot rows in an HBM slab pool and the long cold tail
+in host-memory runs:
+
+  object = one embedding row;  key = vocab id
+  fast tier = HBM row pool (random in-place gradient updates -- slab writes)
+  slow tier = host-memory sorted runs, moved by MSC compactions between
+              training steps (large sequential DMAs, never per-row copies)
+
+The *training step* only ever touches the fast pool: ``prepare_batch``
+promotes any missing row before the step (a slow read, counted), the step
+gathers/updates rows by slot, and MSC compaction demotes cold rows when the
+pool fills.  The token stream itself drives the clock tracker.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compaction, tiers
+from repro.core.compaction import Movement
+from repro.core.tiers import TierConfig, TierState
+from repro.core.utils import alloc_slots, sorted_lookup
+
+
+class EmbedStoreConfig(NamedTuple):
+    vocab: int = 65536
+    dim: int = 512
+    fast_rows: int = 8192
+    dtype: str = "float32"
+
+    def tier(self) -> TierConfig:
+        return TierConfig(
+            key_space=self.vocab,
+            fast_slots=self.fast_rows,
+            slow_slots=self.vocab,          # slow tier can hold all rows
+            value_width=1,
+            value_bytes=self.dim * 4,
+            max_runs=max(self.vocab // 4096, 16),
+            run_size=4096,
+            bloom_bits_per_run=1 << 14,
+            tracker_slots=max(self.fast_rows * 2, 1024),
+            n_buckets=256,
+            pin_threshold=0.5,
+        )
+
+
+class EmbedStoreState(NamedTuple):
+    tier: TierState
+    rows_fast: jax.Array    # [fast_rows, dim]
+    rows_slow: jax.Array    # [vocab, dim] (host memory on TPU)
+
+
+def init(cfg: EmbedStoreConfig, rng: jax.Array) -> EmbedStoreState:
+    """All rows start in the slow tier as one full-key-space run."""
+    tier = tiers.init(cfg.tier())
+    tcfg = cfg.tier()
+    # seed the slow tier with every vocab row in one pass: keys 0..vocab-1
+    # laid out in run_size chunks (sorted by construction).
+    vocab = cfg.vocab
+    keys = jnp.arange(vocab, dtype=jnp.int32)
+    run_of = keys // tcfg.run_size
+    n_runs = (vocab + tcfg.run_size - 1) // tcfg.run_size
+    slow_keys = jnp.full((tcfg.slow_slots,), -1, jnp.int32)
+    slow_keys = slow_keys.at[:vocab].set(keys)
+    slow_run = jnp.full((tcfg.slow_slots,), -1, jnp.int32)
+    slow_run = slow_run.at[:vocab].set(run_of)
+    from repro.core.utils import build_sorted_index
+    sidx_keys, sidx_slots = build_sorted_index(slow_keys)
+    run_ids = jnp.arange(tcfg.max_runs, dtype=jnp.int32)
+    run_lo = jnp.where(run_ids < n_runs, run_ids * tcfg.run_size,
+                       jnp.int32(2**31 - 1))
+    run_hi = jnp.where(run_ids < n_runs,
+                       jnp.minimum((run_ids + 1) * tcfg.run_size, vocab),
+                       jnp.int32(2**31 - 1))
+    run_count = jnp.where(run_ids < n_runs,
+                          run_hi - run_lo, 0).astype(jnp.int32)
+    run_active = run_ids < n_runs
+    from repro.core import bloom
+    blooms = tier.blooms
+    for r in range(int(n_runs)):
+        m = (run_of == r)
+        blooms = bloom.set_run(blooms, jnp.int32(r), keys, m)
+    bucket_slow = jnp.zeros((tcfg.n_buckets,), jnp.int32).at[
+        tiers.bucket_of(tcfg, keys)].add(1)
+    tier = tier._replace(slow_keys=slow_keys, slow_run=slow_run,
+                         sidx_keys=sidx_keys, sidx_slots=sidx_slots,
+                         run_lo=run_lo, run_hi=run_hi, run_count=run_count,
+                         run_active=run_active, blooms=blooms,
+                         bucket_slow=bucket_slow)
+    rows_slow = (jax.random.normal(rng, (tcfg.slow_slots, cfg.dim))
+                 * 0.02).astype(cfg.dtype)
+    rows_fast = jnp.zeros((cfg.fast_rows, cfg.dim), cfg.dtype)
+    return EmbedStoreState(tier=tier, rows_fast=rows_fast,
+                           rows_slow=rows_slow)
+
+
+def prepare_batch(state: EmbedStoreState, cfg: EmbedStoreConfig,
+                  token_ids: jax.Array) -> tuple[EmbedStoreState, jax.Array]:
+    """Promote any batch token's row into the fast pool; return row slots.
+
+    token_ids: [n] (flattened batch).  Returns slots [n] into rows_fast.
+    Promotion of a missing row = slow read + fast write (counted); the
+    training step then runs entirely against the fast pool.
+    """
+    tcfg = cfg.tier()
+    keys = jnp.unique(token_ids.astype(jnp.int32), size=token_ids.shape[0],
+                      fill_value=-1)
+    valid = keys >= 0
+    fslot, ffound = sorted_lookup(state.tier.fidx_keys,
+                                  state.tier.fidx_slots, keys)
+    missing = valid & ~ffound
+    sslot, sfound = sorted_lookup(state.tier.sidx_keys,
+                                  state.tier.sidx_slots, keys)
+    fetch = missing & sfound
+
+    # install missing rows into fast pool slots via the tier store
+    vals = state.rows_slow[jnp.clip(sslot, 0), :1].astype(
+        state.tier.fast_vals.dtype)
+    tier = tiers.put_batch(state.tier, tcfg, keys, vals, fetch)
+    new_slot, nf = sorted_lookup(tier.fidx_keys, tier.fidx_slots, keys)
+    moved = fetch & nf
+    tgt = jnp.where(moved, new_slot, cfg.fast_rows)
+    rows_fast = state.rows_fast.at[tgt].set(
+        state.rows_slow[jnp.clip(sslot, 0)], mode="drop")
+    # charge the host reads (promotion fetch) as slow reads
+    ctr = tier.ctr._replace(
+        slow_reads=tier.ctr.slow_reads + jnp.sum(moved.astype(jnp.int32)))
+    tier = tier._replace(ctr=ctr)
+
+    state = state._replace(tier=tier, rows_fast=rows_fast)
+    # final slots for the actual (non-unique) token stream
+    slot, found = sorted_lookup(tier.fidx_keys, tier.fidx_slots,
+                                token_ids.astype(jnp.int32))
+    return state, jnp.where(found, slot, 0)
+
+
+def lookup(state: EmbedStoreState, token_ids: jax.Array) -> jax.Array:
+    """Gather embeddings for a prepared batch (fast pool only)."""
+    slot, found = sorted_lookup(state.tier.fidx_keys, state.tier.fidx_slots,
+                                token_ids.astype(jnp.int32))
+    rows = state.rows_fast[jnp.clip(slot, 0)]
+    return jnp.where(found[..., None], rows, 0)
+
+
+def apply_grad(state: EmbedStoreState, token_slots: jax.Array,
+               grads: jax.Array, lr: float) -> EmbedStoreState:
+    """In-place slab update of fast rows (the NVM in-place-update path)."""
+    rows = state.rows_fast.at[token_slots].add(
+        (-lr * grads).astype(state.rows_fast.dtype))
+    return state._replace(rows_fast=rows)
+
+
+def compact(state: EmbedStoreState, cfg: EmbedStoreConfig, rng: jax.Array):
+    tier, stats, mv = compaction.compact_once(
+        state.tier, cfg.tier(), rng, promote=True, with_movement=True)
+    state = _apply_movement(state, cfg, mv)._replace(tier=tier)
+    return state, stats
+
+
+def _apply_movement(state: EmbedStoreState, cfg: EmbedStoreConfig,
+                    mv: Movement) -> EmbedStoreState:
+    ns = state.rows_slow.shape[0]
+    src = jnp.clip(mv.m_src_slot, 0)
+    rows_src = jnp.where((mv.m_src_tier == 0)[:, None],
+                         state.rows_fast[src], state.rows_slow[src])
+    dst = jnp.where(mv.m_valid, mv.m_dst_slot, ns)
+    rows_slow = state.rows_slow.at[dst].set(rows_src, mode="drop")
+    pdst = jnp.where(mv.p_valid, mv.p_dst_slot, state.rows_fast.shape[0])
+    rows_fast = state.rows_fast.at[pdst].set(
+        state.rows_slow[jnp.clip(mv.p_src_slot, 0)], mode="drop")
+    return state._replace(rows_fast=rows_fast, rows_slow=rows_slow)
+
+
+def needs_compaction(state: EmbedStoreState, cfg: EmbedStoreConfig):
+    return compaction.needs_compaction(state.tier, cfg.tier())

@@ -1,0 +1,62 @@
+"""Mapper: clock-value distribution -> pinning decisions (PrismDB §4.3).
+
+The mapper turns a *pinning threshold* (target fraction of tracked objects to
+keep on the fast tier) into per-clock-value pin probabilities using the
+current clock histogram:
+
+  * walk clock values 3 -> 0, pinning whole classes while budget remains;
+  * the boundary class is pinned with fractional probability
+    ``remaining_budget / class_size`` (the paper's random sampling);
+  * untracked objects are never pinned (clock treated as "below 0").
+
+The paper keeps the histogram as four atomic counters updated inline; we
+recompute it from the tracker (O(T) bincount, amortized per compaction) and
+also expose an incremental delta path used by the fused Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_CLOCK = 4
+
+
+def pin_probabilities(hist: jax.Array, threshold: jax.Array) -> jax.Array:
+    """float32[4]: probability an object with clock value c is pinned.
+
+    ``threshold`` is the target pinned fraction of *tracked* objects
+    (paper §7: "pinning threshold is calculated as a percentage of the
+    tracker size").
+    """
+    hist = hist.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(hist), 1.0)
+    budget = threshold * total
+    # cumulative count of classes above c (descending walk)
+    desc = hist[::-1]                      # [c3, c2, c1, c0]
+    cum_above = jnp.concatenate([jnp.zeros(1), jnp.cumsum(desc)[:-1]])
+    remaining = jnp.maximum(budget - cum_above, 0.0)
+    probs_desc = jnp.clip(remaining / jnp.maximum(desc, 1.0), 0.0, 1.0)
+    # classes with zero population: probability is irrelevant; make it the
+    # "fully within budget" indicator so downstream logic stays monotone.
+    probs_desc = jnp.where(desc > 0, probs_desc, (remaining > 0).astype(jnp.float32))
+    return probs_desc[::-1]                # [c0, c1, c2, c3]
+
+
+def pin_decisions(clock: jax.Array, tracked: jax.Array, probs: jax.Array,
+                  rng: jax.Array) -> jax.Array:
+    """Bernoulli pin decision per object (untracked objects never pin)."""
+    p = probs[jnp.clip(clock.astype(jnp.int32), 0, N_CLOCK - 1)]
+    p = jnp.where(tracked, p, 0.0)
+    u = jax.random.uniform(rng, clock.shape)
+    return u < p
+
+
+def expected_pinned_fraction(hist: jax.Array, probs: jax.Array) -> jax.Array:
+    hist = hist.astype(jnp.float32)
+    return jnp.sum(hist * probs) / jnp.maximum(jnp.sum(hist), 1.0)
+
+
+def coldness_from_clock(clock: jax.Array, tracked: jax.Array) -> jax.Array:
+    """coldness(j) = 1 / (clock_j + 1); untracked -> clock 0 -> coldness 1."""
+    c = jnp.where(tracked, clock.astype(jnp.float32), 0.0)
+    return 1.0 / (c + 1.0)

@@ -1,0 +1,372 @@
+"""Tiered paged KV cache: PrismDB's core applied to long-context serving.
+
+Mapping (DESIGN.md §2):
+  object            = KV page (page_tokens tokens x kv_heads x head_dim,
+                      for every layer of an attention layer-group)
+  key               = seq_id * max_pages_per_seq + page_idx  (int32)
+  fast tier (NVM)   = HBM page pool; decode appends in place (slab writes)
+  slow tier (flash) = host-memory page pool, written in sorted runs by MSC
+                      compactions (large sequential PCIe DMAs)
+  popularity        = the actual attention page-access stream: Quest-style
+                      per-page key summaries score pages against the query;
+                      the top-k attended pages feed the clock tracker.
+
+The TierState tracks *placement* (slot allocation, runs, bloom, tracker,
+MSC bookkeeping); the page payloads mirror its compaction ``Movement``
+(on TPU the mirror is the tier_compact kernel + pinned-host DMAs).
+
+Attention never blocks on a promotion: pages resident in the slow pool are
+gathered directly (charged as slow reads -- the paper's "reads served from
+flash"); read-triggered compactions then promote what stays hot.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compaction, tiers
+from repro.core.compaction import Movement
+from repro.core.tiers import TierConfig, TierState
+
+
+class PagedKVConfig(NamedTuple):
+    n_layers: int = 4            # attention layers sharing this pool
+    kv_heads: int = 8
+    head_dim: int = 128
+    page_tokens: int = 64
+    fast_pages: int = 512
+    slow_pages: int = 4096
+    max_seqs: int = 16
+    max_pages_per_seq: int = 256
+    topk_pages: int = 16         # pages attended per step (Quest-style)
+    recent_pages: int = 2        # most recent pages always attended
+    dtype: str = "bfloat16"
+
+    def tier(self) -> TierConfig:
+        return TierConfig(
+            key_space=self.max_seqs * self.max_pages_per_seq,
+            fast_slots=self.fast_pages,
+            slow_slots=self.slow_pages,
+            value_width=1,
+            value_bytes=(2 * self.n_layers * self.page_tokens * self.kv_heads
+                         * self.head_dim * 2),      # bf16 K+V payload bytes
+            max_runs=max(self.slow_pages // 128, 16),
+            run_size=128,
+            bloom_bits_per_run=1 << 12,
+            tracker_slots=max(self.fast_pages * 2, 256),
+            n_buckets=min(256, max(self.max_seqs * 4, 16)),
+            pin_threshold=0.7,
+        )
+
+
+class PagedKVState(NamedTuple):
+    tier: TierState
+    # payload pools: [L, P, T, H, D]
+    k_fast: jax.Array
+    v_fast: jax.Array
+    k_slow: jax.Array
+    v_slow: jax.Array
+    # Quest page summaries, per pool slot: [L, P, H, D]
+    kmax_fast: jax.Array
+    kmin_fast: jax.Array
+    kmax_slow: jax.Array
+    kmin_slow: jax.Array
+    seq_len: jax.Array           # i32[max_seqs] tokens written per sequence
+
+
+def page_key(cfg: PagedKVConfig, seq_ids: jax.Array,
+             page_idx: jax.Array) -> jax.Array:
+    return (seq_ids * cfg.max_pages_per_seq + page_idx).astype(jnp.int32)
+
+
+def init(cfg: PagedKVConfig) -> PagedKVState:
+    dt = jnp.dtype(cfg.dtype)
+    l, t, h, d = cfg.n_layers, cfg.page_tokens, cfg.kv_heads, cfg.head_dim
+    pf, ps = cfg.fast_pages, cfg.slow_pages
+    big = jnp.finfo(dt).max
+    return PagedKVState(
+        tier=tiers.init(cfg.tier()),
+        k_fast=jnp.zeros((l, pf, t, h, d), dt),
+        v_fast=jnp.zeros((l, pf, t, h, d), dt),
+        k_slow=jnp.zeros((l, ps, t, h, d), dt),
+        v_slow=jnp.zeros((l, ps, t, h, d), dt),
+        kmax_fast=jnp.full((l, pf, h, d), -big, dt),
+        kmin_fast=jnp.full((l, pf, h, d), big, dt),
+        kmax_slow=jnp.full((l, ps, h, d), -big, dt),
+        kmin_slow=jnp.full((l, ps, h, d), big, dt),
+        seq_len=jnp.zeros((cfg.max_seqs,), jnp.int32),
+    )
+
+
+# ------------------------------------------------------------------ lookup
+
+def fast_slots_of(state: PagedKVState, keys: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    from repro.core.utils import sorted_lookup
+    slot, found = sorted_lookup(state.tier.fidx_keys, state.tier.fidx_slots,
+                                keys)
+    return jnp.where(found, slot, -1), found
+
+
+def slow_slots_of(state: PagedKVState, keys: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    from repro.core.utils import sorted_lookup
+    slot, found = sorted_lookup(state.tier.sidx_keys, state.tier.sidx_slots,
+                                keys)
+    return jnp.where(found, slot, -1), found
+
+
+# ------------------------------------------------------------------ append
+
+def append_tokens(state: PagedKVState, cfg: PagedKVConfig,
+                  seq_ids: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                  valid: jax.Array) -> PagedKVState:
+    """Append one token per (valid) sequence; decode-step write path.
+
+    k_new/v_new: [L, B, H, D].  Opens a fresh fast-tier page on page
+    boundaries (a slab insert); otherwise an in-place slab write.  If the
+    sequence's tail page was demoted, it is *reopened*: a new fast version
+    is inserted and the page payload copied back from the slow pool (one
+    slow read; the stale slow copy is cleaned at the next merge, exactly
+    PrismDB's newer-version-supersedes rule).
+    """
+    pos = state.seq_len[seq_ids]
+    pidx = pos // cfg.page_tokens
+    off = pos % cfg.page_tokens
+    keys = page_key(cfg, seq_ids, pidx)
+
+    slot0, found0 = _fast_lookup(state.tier, keys)
+    reopen = valid & ~found0 & (off > 0)
+    opening = valid & ((off == 0) & ~found0 | reopen)
+    dummy = jnp.zeros((keys.shape[0], 1), state.tier.fast_vals.dtype)
+    tier = tiers.put_batch(state.tier, cfg.tier(), keys, dummy, opening)
+
+    slot, found = _fast_lookup(tier, keys)
+    ok = valid & found
+    tgt_slot = jnp.where(ok, slot, cfg.fast_pages)
+
+    # copy demoted tail pages back from the slow pool before writing
+    from repro.core.utils import sorted_lookup
+    sslot, sfound = sorted_lookup(state.tier.sidx_keys, state.tier.sidx_slots,
+                                  keys)
+    cp = reopen & sfound & found
+    cp_tgt = jnp.where(cp, slot, cfg.fast_pages)
+    ss = jnp.clip(sslot, 0)
+    k_fast = state.k_fast.at[:, cp_tgt].set(state.k_slow[:, ss], mode="drop")
+    v_fast = state.v_fast.at[:, cp_tgt].set(state.v_slow[:, ss], mode="drop")
+    kmax = state.kmax_fast.at[:, cp_tgt].set(state.kmax_slow[:, ss],
+                                             mode="drop")
+    kmin = state.kmin_fast.at[:, cp_tgt].set(state.kmin_slow[:, ss],
+                                             mode="drop")
+    # fresh pages must start from clean summaries (slots recycle)
+    dt = k_fast.dtype
+    big = jnp.finfo(dt).max
+    fresh = ok & (off == 0)
+    fr_tgt = jnp.where(fresh, slot, cfg.fast_pages)
+    kmax = kmax.at[:, fr_tgt].set(-big, mode="drop")
+    kmin = kmin.at[:, fr_tgt].set(big, mode="drop")
+    ctr = tier.ctr._replace(
+        slow_reads=tier.ctr.slow_reads + jnp.sum(cp.astype(jnp.int32)))
+    tier = tier._replace(ctr=ctr)
+
+    k_fast = k_fast.at[:, tgt_slot, off].set(k_new, mode="drop")
+    v_fast = v_fast.at[:, tgt_slot, off].set(v_new, mode="drop")
+    kmax = kmax.at[:, tgt_slot].max(k_new, mode="drop")
+    kmin = kmin.at[:, tgt_slot].min(k_new, mode="drop")
+    seq_len = state.seq_len.at[jnp.where(ok, seq_ids, cfg.max_seqs)].add(
+        1, mode="drop")
+    return state._replace(tier=tier, k_fast=k_fast, v_fast=v_fast,
+                          kmax_fast=kmax, kmin_fast=kmin, seq_len=seq_len)
+
+
+def _fast_lookup(tier: TierState, keys: jax.Array):
+    from repro.core.utils import sorted_lookup
+    return sorted_lookup(tier.fidx_keys, tier.fidx_slots, keys)
+
+
+def bulk_insert(state: PagedKVState, cfg: PagedKVConfig, seq_id: jax.Array,
+                k_seq: jax.Array, v_seq: jax.Array,
+                n_tokens: jax.Array) -> PagedKVState:
+    """Prefill write path: insert a whole sequence's KV at once.
+
+    k_seq/v_seq: [L, S, H, D] with S a multiple of page_tokens (padded).
+    """
+    l, s, h, d = k_seq.shape
+    t = cfg.page_tokens
+    n_pages_max = s // t
+    pidx = jnp.arange(n_pages_max, dtype=jnp.int32)
+    keys = page_key(cfg, seq_id, pidx)
+    live = pidx * t < n_tokens
+    dummy = jnp.zeros((n_pages_max, 1), state.tier.fast_vals.dtype)
+    tier = tiers.put_batch(state.tier, cfg.tier(), keys, dummy, live)
+    slot, found = _fast_lookup(tier, keys)
+    ok = live & found
+    tgt = jnp.where(ok, slot, cfg.fast_pages)
+    kp = k_seq.reshape(l, n_pages_max, t, h, d)
+    vp = v_seq.reshape(l, n_pages_max, t, h, d)
+    k_fast = state.k_fast.at[:, tgt].set(kp, mode="drop")
+    v_fast = state.v_fast.at[:, tgt].set(vp, mode="drop")
+    kmax = state.kmax_fast.at[:, tgt].set(jnp.max(kp, axis=2), mode="drop")
+    kmin = state.kmin_fast.at[:, tgt].set(jnp.min(kp, axis=2), mode="drop")
+    seq_len = state.seq_len.at[seq_id].max(n_tokens)
+    return state._replace(tier=tier, k_fast=k_fast, v_fast=v_fast,
+                          kmax_fast=kmax, kmin_fast=kmin, seq_len=seq_len)
+
+
+# ------------------------------------------------- page selection + gather
+
+def select_pages(state: PagedKVState, cfg: PagedKVConfig, seq_ids: jax.Array,
+                 q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quest-style top-k page selection per sequence.
+
+    q: [L, B, Hq, D] current queries.  Returns (page_idx [B, K], mask).
+    Scores every logical page of the sequence from its summaries (either
+    pool -- summaries are metadata, always "fast"), keeps the top-k plus
+    the most recent pages.
+    """
+    b = seq_ids.shape[0]
+    mp = cfg.max_pages_per_seq
+    pidx = jnp.arange(mp, dtype=jnp.int32)[None, :]            # [1, MP]
+    keys = page_key(cfg, seq_ids[:, None], pidx)               # [B, MP]
+    n_pages = (state.seq_len[seq_ids] + cfg.page_tokens - 1) \
+        // cfg.page_tokens
+    exists = pidx < n_pages[:, None]
+
+    fslot, ffound = _fast_lookup(state.tier, keys.reshape(-1))
+    from repro.core.utils import sorted_lookup
+    sslot, sfound = sorted_lookup(state.tier.sidx_keys, state.tier.sidx_slots,
+                                  keys.reshape(-1))
+    fslot = fslot.reshape(b, mp)
+    sslot = sslot.reshape(b, mp)
+    ffound = ffound.reshape(b, mp) & exists
+    sfound = sfound.reshape(b, mp) & exists & ~ffound
+
+    # group queries onto kv heads: q [L,B,Hq,D] -> [L,B,Hkv,D] mean over group
+    hq = q.shape[2]
+    g = hq // cfg.kv_heads
+    qg = q.reshape(q.shape[0], b, cfg.kv_heads, g, q.shape[3]).mean(axis=3)
+
+    def summ(pool_max, pool_min, slots, found):
+        pm = pool_max[:, jnp.clip(slots, 0)]                   # [L,B,MP,H,D]
+        pn = pool_min[:, jnp.clip(slots, 0)]
+        s = jnp.maximum(qg[:, :, None] * pm.astype(qg.dtype),
+                        qg[:, :, None] * pn.astype(qg.dtype))
+        s = jnp.sum(s, axis=(0, 3, 4))                         # [B, MP]
+        return jnp.where(found, s, -jnp.inf)
+
+    score = jnp.where(
+        ffound, summ(state.kmax_fast, state.kmin_fast, fslot, ffound),
+        summ(state.kmax_slow, state.kmin_slow, sslot, sfound))
+    score = jnp.where(ffound | sfound, score, -jnp.inf)
+    # recent pages always win
+    recent = pidx >= jnp.maximum(n_pages[:, None] - cfg.recent_pages, 0)
+    score = jnp.where(recent & exists, jnp.inf, score)
+
+    k = min(cfg.topk_pages, mp)
+    top_score, top_idx = jax.lax.top_k(score, k)               # [B, K]
+    mask = top_score > -jnp.inf
+    return top_idx.astype(jnp.int32), mask
+
+
+def gather_pages(state: PagedKVState, cfg: PagedKVConfig, seq_ids: jax.Array,
+                 page_idx: jax.Array, mask: jax.Array
+                 ) -> tuple[PagedKVState, jax.Array, jax.Array, jax.Array]:
+    """Gather selected pages for attention; returns (state', k, v, token_mask).
+
+    k/v: [L, B, K*T, H, D].  Pages resident in the slow pool are read
+    directly from host memory (charged as slow reads via the tier store --
+    the paper's "reads served from flash"); the access feeds the tracker.
+    """
+    b, k = page_idx.shape
+    keys = page_key(cfg, seq_ids[:, None], page_idx)          # [B, K]
+    flat = keys.reshape(-1)
+    tier, _, found, src = tiers.get_batch(state.tier, cfg.tier(), flat,
+                                          mask.reshape(-1))
+    fslot, ffound = _fast_lookup(state.tier, flat)
+    from repro.core.utils import sorted_lookup
+    sslot, sfound = sorted_lookup(state.tier.sidx_keys,
+                                  state.tier.sidx_slots, flat)
+    use_fast = ffound & mask.reshape(-1)
+    use_slow = sfound & ~ffound & mask.reshape(-1)
+
+    kf = state.k_fast[:, jnp.clip(fslot, 0)]                  # [L,BK,T,H,D]
+    vf = state.v_fast[:, jnp.clip(fslot, 0)]
+    ks = state.k_slow[:, jnp.clip(sslot, 0)]
+    vs = state.v_slow[:, jnp.clip(sslot, 0)]
+    sel = use_fast[None, :, None, None, None]
+    have = (use_fast | use_slow)[None, :, None, None, None]
+    kk = jnp.where(sel, kf, ks) * have.astype(kf.dtype)
+    vv = jnp.where(sel, vf, vs) * have.astype(vf.dtype)
+    l, _, t, h, d = kk.shape
+    kk = kk.reshape(l, b, k, t, h, d).reshape(l, b, k * t, h, d)
+    vv = vv.reshape(l, b, k, t, h, d).reshape(l, b, k * t, h, d)
+
+    # token-level mask: page valid AND token < seq_len at that page
+    pos = (page_idx[..., None] * t + jnp.arange(t)[None, None, :])
+    tok_ok = (pos < state.seq_len[seq_ids][:, None, None]) \
+        & (use_fast | use_slow).reshape(b, k)[..., None]
+    return state._replace(tier=tier), kk, vv, tok_ok.reshape(b, k * t)
+
+
+# --------------------------------------------------------------- compaction
+
+def tail_page_keys(state: PagedKVState, cfg: PagedKVConfig) -> jax.Array:
+    """Sorted keys of every active sequence's mutable tail page (must pin)."""
+    sl = state.seq_len
+    tail = jnp.maximum((sl + cfg.page_tokens - 1) // cfg.page_tokens - 1, 0)
+    keys = page_key(cfg, jnp.arange(cfg.max_seqs, dtype=jnp.int32), tail)
+    keys = jnp.where(sl > 0, keys, jnp.int32(2**31 - 1))
+    return jnp.sort(keys)
+
+
+def compact(state: PagedKVState, cfg: PagedKVConfig, rng: jax.Array,
+            promote: bool = True):
+    """One MSC compaction + payload movement mirror."""
+    tier, stats, mv = compaction.compact_once(
+        state.tier, cfg.tier(), rng, promote=promote, with_movement=True,
+        force_pin_keys=tail_page_keys(state, cfg))
+    state = apply_movement(state, cfg, mv)._replace(tier=tier)
+    return state, stats
+
+
+def apply_movement(state: PagedKVState, cfg: PagedKVConfig,
+                   mv: Movement) -> PagedKVState:
+    """Replay a compaction's physical moves on the page payload pools.
+
+    On TPU this is the tier_compact Pallas kernel + pinned-host DMA; here it
+    is the same dataflow in jnp (gather -> sequential scatter)."""
+    pf, ps = cfg.fast_pages, cfg.slow_pages
+    src_f = jnp.clip(mv.m_src_slot, 0)
+    k_src = jnp.where((mv.m_src_tier == 0)[None, :, None, None, None],
+                      state.k_fast[:, src_f], state.k_slow[:, src_f])
+    v_src = jnp.where((mv.m_src_tier == 0)[None, :, None, None, None],
+                      state.v_fast[:, src_f], state.v_slow[:, src_f])
+    kmax_src = jnp.where((mv.m_src_tier == 0)[None, :, None, None],
+                         state.kmax_fast[:, src_f], state.kmax_slow[:, src_f])
+    kmin_src = jnp.where((mv.m_src_tier == 0)[None, :, None, None],
+                         state.kmin_fast[:, src_f], state.kmin_slow[:, src_f])
+    dst = jnp.where(mv.m_valid, mv.m_dst_slot, ps)
+    k_slow = state.k_slow.at[:, dst].set(k_src, mode="drop")
+    v_slow = state.v_slow.at[:, dst].set(v_src, mode="drop")
+    kmax_slow = state.kmax_slow.at[:, dst].set(kmax_src, mode="drop")
+    kmin_slow = state.kmin_slow.at[:, dst].set(kmin_src, mode="drop")
+
+    psrc = jnp.clip(mv.p_src_slot, 0)
+    pdst = jnp.where(mv.p_valid, mv.p_dst_slot, pf)
+    k_fast = state.k_fast.at[:, pdst].set(state.k_slow[:, psrc], mode="drop")
+    v_fast = state.v_fast.at[:, pdst].set(state.v_slow[:, psrc], mode="drop")
+    kmax_fast = state.kmax_fast.at[:, pdst].set(state.kmax_slow[:, psrc],
+                                                mode="drop")
+    kmin_fast = state.kmin_fast.at[:, pdst].set(state.kmin_slow[:, psrc],
+                                                mode="drop")
+    return state._replace(k_fast=k_fast, v_fast=v_fast, k_slow=k_slow,
+                          v_slow=v_slow, kmax_fast=kmax_fast,
+                          kmin_fast=kmin_fast, kmax_slow=kmax_slow,
+                          kmin_slow=kmin_slow)
+
+
+def needs_compaction(state: PagedKVState, cfg: PagedKVConfig) -> jax.Array:
+    return compaction.needs_compaction(state.tier, cfg.tier())

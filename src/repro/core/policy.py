@@ -1,0 +1,109 @@
+"""Read-triggered compaction state machine (PrismDB §5.3).
+
+Write-triggered compactions fire on the fast-tier high watermark.  Under
+read-heavy workloads that trigger is too rare to keep up with popularity
+drift, so PrismDB adds three stages:
+
+  DETECT   -- the workload is read-dominated AND a large share of tracked
+              keys resolve to the slow tier -> start an epoch of proactive
+              compactions (these promote hot slow-tier objects).
+  MONITOR  -- at each epoch end, compare the fraction of reads served from
+              the fast tier against the previous epoch; improvement above
+              ``min_improvement`` continues, otherwise COOLDOWN.
+  COOLDOWN -- no read-triggered compactions for ``cooldown_ops``; then back
+              to DETECT.
+
+Defaults follow the paper: epoch = 1M client ops, improvement threshold 1%,
+cool-down 10M ops (scaled down in simulations via PolicyConfig).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tracker
+from repro.core.tiers import TierState
+
+DETECT, ACTIVE, COOLDOWN = 0, 1, 2
+
+
+class PolicyConfig(NamedTuple):
+    epoch_ops: int = 1_000_000
+    cooldown_ops: int = 10_000_000
+    min_improvement: float = 0.01
+    read_heavy_frac: float = 0.8      # reads/ops above this = read-dominated
+    slow_tracked_frac: float = 0.3    # tracked-on-slow share that triggers
+    compactions_per_epoch_step: int = 1
+
+
+class PolicyState(NamedTuple):
+    phase: jax.Array            # i32: DETECT / ACTIVE / COOLDOWN
+    ops_mark: jax.Array         # i32 op counter at phase entry
+    fast_hits_mark: jax.Array   # i32 ctr.hits_fast at epoch start
+    gets_mark: jax.Array        # i32 ctr.gets at epoch start
+    prev_ratio: jax.Array       # f32 fast-read ratio of previous epoch
+
+
+def init() -> PolicyState:
+    z = jnp.zeros((), jnp.int32)
+    return PolicyState(phase=jnp.zeros((), jnp.int32), ops_mark=z,
+                       fast_hits_mark=z, gets_mark=z,
+                       prev_ratio=jnp.zeros((), jnp.float32))
+
+
+def _fast_ratio(state: TierState, pol: PolicyState) -> jax.Array:
+    d_gets = (state.ctr.gets - pol.gets_mark).astype(jnp.float32)
+    d_fast = (state.ctr.hits_fast - pol.fast_hits_mark).astype(jnp.float32)
+    return d_fast / jnp.maximum(d_gets, 1.0)
+
+
+def step(pol: PolicyState, state: TierState, cfg: PolicyConfig,
+         total_ops: jax.Array) -> tuple[PolicyState, jax.Array]:
+    """Advance the state machine; returns (policy', should_compact_now)."""
+    ops_in_phase = total_ops - pol.ops_mark
+    reads = state.ctr.gets.astype(jnp.float32)
+    ops = jnp.maximum((state.ctr.gets + state.ctr.puts).astype(jnp.float32),
+                      1.0)
+    read_heavy = reads / ops >= cfg.read_heavy_frac
+    slow_tracked = (1.0 - tracker.fast_fraction_of_tracked(state.tracker)
+                    ) >= cfg.slow_tracked_frac
+
+    def from_detect(p):
+        trigger = read_heavy & slow_tracked
+        newp = PolicyState(
+            phase=jnp.where(trigger, ACTIVE, DETECT).astype(jnp.int32),
+            ops_mark=jnp.where(trigger, total_ops, p.ops_mark),
+            fast_hits_mark=jnp.where(trigger, state.ctr.hits_fast,
+                                     p.fast_hits_mark),
+            gets_mark=jnp.where(trigger, state.ctr.gets, p.gets_mark),
+            prev_ratio=jnp.where(trigger, _fast_ratio(state, p),
+                                 p.prev_ratio))
+        return newp, trigger
+
+    def from_active(p):
+        epoch_done = ops_in_phase >= cfg.epoch_ops
+        ratio = _fast_ratio(state, p)
+        improved = (ratio - p.prev_ratio) >= cfg.min_improvement
+        cont = epoch_done & improved
+        cool = epoch_done & ~improved
+        newp = PolicyState(
+            phase=jnp.where(cool, COOLDOWN, ACTIVE).astype(jnp.int32),
+            ops_mark=jnp.where(epoch_done, total_ops, p.ops_mark),
+            fast_hits_mark=jnp.where(epoch_done, state.ctr.hits_fast,
+                                     p.fast_hits_mark),
+            gets_mark=jnp.where(epoch_done, state.ctr.gets, p.gets_mark),
+            prev_ratio=jnp.where(epoch_done, ratio, p.prev_ratio))
+        return newp, ~cool
+
+    def from_cooldown(p):
+        done = ops_in_phase >= cfg.cooldown_ops
+        newp = p._replace(
+            phase=jnp.where(done, DETECT, COOLDOWN).astype(jnp.int32),
+            ops_mark=jnp.where(done, total_ops, p.ops_mark))
+        return newp, jnp.zeros((), bool)
+
+    newp, go = jax.lax.switch(pol.phase, [from_detect, from_active,
+                                          from_cooldown], pol)
+    return newp, go

@@ -1,0 +1,314 @@
+"""TieredStore: PrismDB's hybrid two-tier data layout, functional in JAX.
+
+Fast tier (paper: NVM slabs / here: HBM slab pool)
+  * fixed-slot unsorted pool -> random in-place writes are O(1)
+  * a sorted (key -> slot) index plays the paper's DRAM B-tree role
+
+Slow tier (paper: QLC SSTs in a log / here: host-memory runs)
+  * slotted pool whose slots carry a run id; runs are immutable, key-sorted,
+    written append-only by compaction (LFS-style: new runs appended, old runs
+    freed) -> all slow-tier writes are large and sequential
+  * run directory (lo/hi/count) is the paper's manifest
+  * one Bloom filter per run, held on the fast tier
+
+All shapes static; variable-size sets ride as (array, mask).  I/O accounting
+(the quantity MSC's cost term optimizes) is threaded through every op.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom, tracker
+from repro.core.tracker import TrackerState
+from repro.core.utils import (PADKEY, alloc_slots, build_sorted_index,
+                              dedupe_keep_last, sorted_lookup)
+
+
+class TierConfig(NamedTuple):
+    key_space: int = 1 << 20        # keys live in [0, key_space)
+    fast_slots: int = 1 << 14       # fast-tier capacity (objects)
+    slow_slots: int = 1 << 17       # slow-tier capacity (objects)
+    value_width: int = 4            # payload lanes (float32) per object
+    value_bytes: int = 1024         # *modeled* object size (paper: ~1 KB)
+    max_runs: int = 256
+    run_size: int = 4096            # target objects per run (SST size)
+    bloom_bits_per_run: int = 1 << 15
+    tracker_slots: int = 1 << 16    # paper: ~10-20% of key space
+    n_buckets: int = 256            # approx-MSC buckets
+    pin_threshold: float = 0.7      # paper default (§7)
+    promote_min_clock: int = 3      # promote only the hottest clock class
+    high_watermark: float = 0.98    # paper §4.2
+    low_watermark: float = 0.95
+    range_fanout_i: int = 1         # compaction key range = i consecutive runs
+    power_k: int = 8                # power-of-k range candidates (§A.1)
+
+
+class Counters(NamedTuple):
+    """Operation counters in OBJECT units (fixed-size objects; bytes are
+    derived as count * cfg.value_bytes at report time -- keeps everything
+    int32-safe without x64)."""
+    gets: jax.Array
+    puts: jax.Array
+    hits_fast: jax.Array
+    hits_slow: jax.Array
+    misses: jax.Array
+    fast_reads: jax.Array
+    fast_writes: jax.Array
+    slow_reads: jax.Array
+    slow_writes: jax.Array
+    bloom_probes: jax.Array
+    bloom_fps: jax.Array
+    compactions: jax.Array
+    demoted: jax.Array
+    promoted: jax.Array
+    rate_limited: jax.Array
+
+    @staticmethod
+    def zeros() -> "Counters":
+        z = jnp.zeros((), dtype=jnp.int32)
+        return Counters(*([z] * len(Counters._fields)))
+
+
+class TierState(NamedTuple):
+    # fast tier
+    fast_keys: jax.Array      # i32[Nf], -1 free
+    fast_vals: jax.Array      # f32[Nf, V]
+    fast_ver: jax.Array       # i32[Nf]; < 0 marks a tombstone
+    fidx_keys: jax.Array      # i32[Nf] sorted (PADKEY pad)
+    fidx_slots: jax.Array     # i32[Nf]
+    # slow tier
+    slow_keys: jax.Array      # i32[Ns], -1 free
+    slow_vals: jax.Array      # f32[Ns, V]
+    slow_run: jax.Array       # i32[Ns], run id, -1 free
+    sidx_keys: jax.Array      # i32[Ns] sorted
+    sidx_slots: jax.Array     # i32[Ns]
+    # run directory
+    run_lo: jax.Array         # i32[R] (PADKEY if inactive)
+    run_hi: jax.Array         # i32[R]
+    run_count: jax.Array      # i32[R]
+    run_active: jax.Array     # bool[R]
+    blooms: jax.Array         # u32[R, W]
+    # popularity
+    tracker: TrackerState
+    # approx-MSC bucket statistics (incrementally maintained)
+    bucket_fast: jax.Array    # i32[B] live fast keys per bucket
+    bucket_slow: jax.Array    # i32[B] live slow keys per bucket
+    bucket_overlap: jax.Array # i32[B] est. fast∩slow keys per bucket
+    ctr: Counters
+
+
+def init(cfg: TierConfig, dtype=jnp.float32) -> TierState:
+    nf, ns, r, v = cfg.fast_slots, cfg.slow_slots, cfg.max_runs, cfg.value_width
+    fidx_k, fidx_s = build_sorted_index(jnp.full((nf,), -1, jnp.int32))
+    sidx_k, sidx_s = build_sorted_index(jnp.full((ns,), -1, jnp.int32))
+    return TierState(
+        fast_keys=jnp.full((nf,), -1, jnp.int32),
+        fast_vals=jnp.zeros((nf, v), dtype),
+        fast_ver=jnp.zeros((nf,), jnp.int32),
+        fidx_keys=fidx_k, fidx_slots=fidx_s,
+        slow_keys=jnp.full((ns,), -1, jnp.int32),
+        slow_vals=jnp.zeros((ns, v), dtype),
+        slow_run=jnp.full((ns,), -1, jnp.int32),
+        sidx_keys=sidx_k, sidx_slots=sidx_s,
+        run_lo=jnp.full((r,), PADKEY, jnp.int32),
+        run_hi=jnp.full((r,), PADKEY, jnp.int32),
+        run_count=jnp.zeros((r,), jnp.int32),
+        run_active=jnp.zeros((r,), bool),
+        blooms=bloom.init(r, cfg.bloom_bits_per_run),
+        tracker=tracker.init(cfg.tracker_slots),
+        bucket_fast=jnp.zeros((cfg.n_buckets,), jnp.int32),
+        bucket_slow=jnp.zeros((cfg.n_buckets,), jnp.int32),
+        bucket_overlap=jnp.zeros((cfg.n_buckets,), jnp.int32),
+        ctr=Counters.zeros(),
+    )
+
+
+def bucket_of(cfg: TierConfig, keys: jax.Array) -> jax.Array:
+    width = max(cfg.key_space // cfg.n_buckets, 1)
+    return jnp.clip(keys // width, 0, cfg.n_buckets - 1).astype(jnp.int32)
+
+
+def fast_occupancy(state: TierState) -> jax.Array:
+    used = jnp.sum((state.fast_keys >= 0).astype(jnp.int32))
+    return used.astype(jnp.float32) / state.fast_keys.shape[0]
+
+
+def free_fast_slots(state: TierState) -> jax.Array:
+    return jnp.sum((state.fast_keys < 0).astype(jnp.int32))
+
+
+def run_of_keys(state: TierState, keys: jax.Array) -> jax.Array:
+    """int32[n] covering-run id per key (-1 = none).  Runs hold disjoint
+    key ranges so at most one run covers a key."""
+    cover = (state.run_active[:, None]
+             & (state.run_lo[:, None] <= keys[None, :])
+             & (keys[None, :] < state.run_hi[:, None]))
+    any_cover = jnp.any(cover, axis=0)
+    rid = jnp.argmax(cover, axis=0).astype(jnp.int32)
+    return jnp.where(any_cover, rid, -1)
+
+
+# ----------------------------------------------------------------- put path
+
+def put_batch(state: TierState, cfg: TierConfig, keys: jax.Array,
+              vals: jax.Array, valid: jax.Array) -> TierState:
+    """Insert/update a batch.  All writes land on the fast tier (paper §4.2):
+    existing fast objects update in place, fresh keys take a free slot."""
+    keep = dedupe_keep_last(keys, valid)
+    slot, found = sorted_lookup(state.fidx_keys, state.fidx_slots, keys)
+    found = found & keep
+
+    # in-place updates
+    upd_tgt = jnp.where(found, slot, state.fast_keys.shape[0])
+    fast_vals = state.fast_vals.at[upd_tgt].set(vals, mode="drop")
+    fast_ver = state.fast_ver.at[upd_tgt].set(
+        jnp.abs(state.fast_ver[jnp.clip(slot, 0)]) + 1, mode="drop")
+
+    # fresh inserts
+    fresh = keep & ~found
+    new_slots = alloc_slots(state.fast_keys, fresh)
+    ins_ok = fresh & (new_slots >= 0)
+    ins_tgt = jnp.where(ins_ok, new_slots, state.fast_keys.shape[0])
+    fast_keys = state.fast_keys.at[ins_tgt].set(keys, mode="drop")
+    fast_vals = fast_vals.at[ins_tgt].set(vals, mode="drop")
+    fast_ver = fast_ver.at[ins_tgt].set(1, mode="drop")
+    fidx_keys, fidx_slots = build_sorted_index(fast_keys)
+
+    # bucket stats: fresh keys enter the fast tier; if a covering run's bloom
+    # says the key may already live on the slow tier, count it as overlap.
+    b = bucket_of(cfg, keys)
+    btgt = jnp.where(ins_ok, b, cfg.n_buckets)
+    bucket_fast = state.bucket_fast.at[btgt].add(1, mode="drop")
+    rid = run_of_keys(state, keys)
+    maybe_slow = bloom.query_per_key(state.blooms, rid, keys) & ins_ok
+    otgt = jnp.where(maybe_slow, b, cfg.n_buckets)
+    bucket_overlap = state.bucket_overlap.at[otgt].add(1, mode="drop")
+
+    trk = tracker.access_batched(state.tracker, keys,
+                                 jnp.zeros_like(keys, jnp.int8), keep)
+
+    n = jnp.sum(keep.astype(jnp.int32))
+    ctr = state.ctr._replace(
+        puts=state.ctr.puts + n,
+        fast_writes=state.ctr.fast_writes + n,
+    )
+    return state._replace(
+        fast_keys=fast_keys, fast_vals=fast_vals, fast_ver=fast_ver,
+        fidx_keys=fidx_keys, fidx_slots=fidx_slots,
+        bucket_fast=bucket_fast, bucket_overlap=bucket_overlap,
+        tracker=trk, ctr=ctr)
+
+
+# ----------------------------------------------------------------- get path
+
+def get_batch(state: TierState, cfg: TierConfig, keys: jax.Array,
+              valid: jax.Array) -> tuple[TierState, jax.Array, jax.Array,
+                                         jax.Array]:
+    """Returns (state', vals, found, source) with source 0=fast 1=slow -1=miss.
+
+    Lookup order (paper §4.1): fast index -> bloom -> slow run.  Every
+    bloom-positive probe of the slow tier is charged a slow read, including
+    false positives.
+    """
+    fslot, ffound = sorted_lookup(state.fidx_keys, state.fidx_slots, keys)
+    ffound = ffound & valid
+    tomb = state.fast_ver[jnp.clip(fslot, 0)] < 0
+    fhit = ffound & ~tomb
+    fvals = state.fast_vals[jnp.clip(fslot, 0)]
+
+    need_slow = valid & ~ffound          # tombstone hides slow copy
+    rid = run_of_keys(state, keys)
+    maybe = bloom.query_per_key(state.blooms, rid, keys) & need_slow
+    sslot, sfound = sorted_lookup(state.sidx_keys, state.sidx_slots, keys)
+    shit = sfound & maybe
+    svals = state.slow_vals[jnp.clip(sslot, 0)]
+
+    vals = jnp.where(fhit[:, None], fvals, jnp.where(shit[:, None], svals, 0))
+    found = fhit | shit
+    source = jnp.where(fhit, 0, jnp.where(shit, 1, -1)).astype(jnp.int32)
+
+    trk = tracker.access_batched(state.tracker, keys,
+                                 jnp.where(shit, 1, 0).astype(jnp.int8),
+                                 valid & found)
+
+    n = jnp.sum(valid.astype(jnp.int32))
+    nf = jnp.sum(fhit.astype(jnp.int32))
+    nprobe = jnp.sum(maybe.astype(jnp.int32))
+    nshit = jnp.sum(shit.astype(jnp.int32))
+    ctr = state.ctr._replace(
+        gets=state.ctr.gets + n,
+        hits_fast=state.ctr.hits_fast + nf,
+        hits_slow=state.ctr.hits_slow + nshit,
+        misses=state.ctr.misses + jnp.sum((valid & ~found).astype(jnp.int32)),
+        fast_reads=state.ctr.fast_reads + nf,
+        slow_reads=state.ctr.slow_reads + nprobe,
+        bloom_probes=state.ctr.bloom_probes
+        + jnp.sum(need_slow.astype(jnp.int32)),
+        bloom_fps=state.ctr.bloom_fps
+        + jnp.sum((maybe & ~sfound).astype(jnp.int32)),
+    )
+    return state._replace(tracker=trk, ctr=ctr), vals, found, source
+
+
+def delete_batch(state: TierState, cfg: TierConfig, keys: jax.Array,
+                 valid: jax.Array) -> TierState:
+    """Client deletes (paper §6): fast copies freed; keys that may survive on
+    the slow tier leave a tombstone in the fast tier (cleared at compaction).
+    """
+    keep = dedupe_keep_last(keys, valid)
+    fslot, ffound = sorted_lookup(state.fidx_keys, state.fidx_slots, keys)
+    ffound = ffound & keep
+
+    rid = run_of_keys(state, keys)
+    maybe_slow = bloom.query_per_key(state.blooms, rid, keys) & keep
+
+    nf = state.fast_keys.shape[0]
+    # case 1: fast copy exists, no slow copy -> free the slot
+    free_tgt = jnp.where(ffound & ~maybe_slow, fslot, nf)
+    fast_keys = state.fast_keys.at[free_tgt].set(-1, mode="drop")
+    b = bucket_of(cfg, keys)
+    bucket_fast = state.bucket_fast.at[
+        jnp.where(ffound & ~maybe_slow, b, cfg.n_buckets)].add(-1, mode="drop")
+    # case 2: slow copy may exist -> tombstone in fast tier
+    need_tomb = maybe_slow
+    tomb_slot = jnp.where(ffound, fslot, -1)
+    fresh_tomb = need_tomb & ~ffound
+    new_slots = alloc_slots(fast_keys, fresh_tomb)
+    tomb_slot = jnp.where(fresh_tomb, new_slots, tomb_slot)
+    ok = need_tomb & (tomb_slot >= 0)
+    ttgt = jnp.where(ok, tomb_slot, nf)
+    fast_keys = fast_keys.at[ttgt].set(keys, mode="drop")
+    fast_ver = state.fast_ver.at[ttgt].set(-1, mode="drop")
+    bucket_fast = bucket_fast.at[
+        jnp.where(fresh_tomb & ok, b, cfg.n_buckets)].add(1, mode="drop")
+
+    fidx_keys, fidx_slots = build_sorted_index(fast_keys)
+    return state._replace(fast_keys=fast_keys, fast_ver=fast_ver,
+                          fidx_keys=fidx_keys, fidx_slots=fidx_slots,
+                          bucket_fast=bucket_fast)
+
+
+def scan(state: TierState, lo: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """Return up to ``n`` live keys >= lo in sorted order, merged across tiers
+    (fast version supersedes slow; tombstones suppress)."""
+    fstart = jnp.searchsorted(state.fidx_keys, lo)
+    sstart = jnp.searchsorted(state.sidx_keys, lo)
+    take = n  # over-fetch n from each tier, merge, take first n live
+    fpos = jnp.clip(fstart + jnp.arange(take), 0, state.fidx_keys.shape[0] - 1)
+    spos = jnp.clip(sstart + jnp.arange(take), 0, state.sidx_keys.shape[0] - 1)
+    fk = jnp.where(fstart + jnp.arange(take) < state.fidx_keys.shape[0],
+                   state.fidx_keys[fpos], PADKEY)
+    sk = jnp.where(sstart + jnp.arange(take) < state.sidx_keys.shape[0],
+                   state.sidx_keys[spos], PADKEY)
+    fslots = state.fidx_slots[fpos]
+    tomb = state.fast_ver[jnp.clip(fslots, 0)] < 0
+    fk = jnp.where(tomb, PADKEY, fk)
+    # drop slow keys shadowed by fast copies (incl. tombstones)
+    _, shadowed = sorted_lookup(state.fidx_keys, state.fidx_slots, sk)
+    sk = jnp.where(shadowed, PADKEY, sk)
+    allk = jnp.sort(jnp.concatenate([fk, sk]))
+    keys = allk[:n]
+    return keys, keys != PADKEY

@@ -1,0 +1,104 @@
+"""Shared helpers for the PrismDB core: hashing, sorted-index ops, masking.
+
+Conventions used across ``repro.core``:
+  * keys are int32 in the domain ``[0, key_space)``
+  * ``EMPTY  = -1``          marks a free pool slot
+  * ``PADKEY = 2**31 - 1``   pads sorted indices (sorts after every real key)
+  * every function is jit-safe with static shapes; variable-size sets are
+    carried as ``(array, mask)`` pairs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+PADKEY = jnp.int32(2**31 - 1)
+
+# Knuth multiplicative hashing constants (distinct streams per use-site).
+_HASH_MULS = (2654435761, 2246822519, 3266489917, 668265263, 374761393)
+
+
+def hash_u32(keys: jax.Array, salt: int = 0) -> jax.Array:
+    """Deterministic 32-bit mix of int32 keys (xorshift-multiply)."""
+    x = keys.astype(jnp.uint32)
+    x = x ^ jnp.uint32((salt * 0x9E3779B9) & 0xFFFFFFFF)
+    x = x * jnp.uint32(_HASH_MULS[salt % len(_HASH_MULS)])
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(2246822519)
+    x = x ^ (x >> 13)
+    return x
+
+
+def hash_mod(keys: jax.Array, n: int, salt: int = 0) -> jax.Array:
+    """Hash keys into ``[0, n)``. ``n`` need not be a power of two."""
+    return (hash_u32(keys, salt) % jnp.uint32(n)).astype(jnp.int32)
+
+
+def sorted_lookup(index_keys: jax.Array, index_vals: jax.Array,
+                  query: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Look up ``query`` keys in a PADKEY-padded sorted index.
+
+    Returns ``(vals, found)``; ``vals`` is garbage where ``found`` is False.
+    """
+    pos = jnp.searchsorted(index_keys, query)
+    pos = jnp.clip(pos, 0, index_keys.shape[0] - 1)
+    found = index_keys[pos] == query
+    return index_vals[pos], found
+
+
+def build_sorted_index(pool_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(sorted_keys, slot_of_sorted) over a pool; free slots sort to the end."""
+    k = jnp.where(pool_keys < 0, PADKEY, pool_keys)
+    order = jnp.argsort(k)
+    return k[order], order.astype(jnp.int32)
+
+
+def alloc_slots(pool_keys: jax.Array, want_mask: jax.Array) -> jax.Array:
+    """Allocate one free slot per True in ``want_mask`` (static size).
+
+    Returns int32 slots, -1 where ``want_mask`` is False or the pool is full.
+    Deterministic: lowest-numbered free slots first.
+    """
+    m = int(want_mask.shape[0])
+    free = pool_keys < 0
+    # rank of each request among requests; rank of each free slot among frees
+    req_rank = jnp.cumsum(want_mask.astype(jnp.int32)) - 1
+    free_slots = jnp.nonzero(free, size=m, fill_value=-1)[0].astype(jnp.int32)
+    slots = jnp.where(want_mask, free_slots[jnp.clip(req_rank, 0, m - 1)], -1)
+    # not enough free slots -> -1
+    n_free = jnp.sum(free.astype(jnp.int32))
+    slots = jnp.where(want_mask & (req_rank < n_free), slots, -1)
+    return slots
+
+
+def dedupe_keep_last(keys: jax.Array, valid: jax.Array) -> jax.Array:
+    """Mask that keeps only the LAST occurrence of each valid key.
+
+    Batched writes may repeat a key; the last write wins (RocksDB semantics).
+    """
+    n = keys.shape[0]
+    k = jnp.where(valid, keys, PADKEY)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # stable sort by key; within equal keys order is ascending index
+    order = jnp.argsort(k, stable=True)
+    ks, ix = k[order], idx[order]
+    is_last = jnp.concatenate([ks[:-1] != ks[1:], jnp.array([True])])
+    keep_sorted = is_last & (ks != PADKEY)
+    keep = jnp.zeros(n, dtype=bool).at[ix].set(keep_sorted)
+    return keep & valid
+
+
+def segment_in_range(sorted_keys: jax.Array, lo: jax.Array, hi: jax.Array,
+                     cap: int) -> tuple[jax.Array, jax.Array]:
+    """Positions of sorted_keys in [lo, hi), capped at ``cap``.
+
+    Returns ``(positions[cap], mask[cap])``. Positions are clipped in-bounds;
+    use the mask. Counting is exact; the slice is truncated if > cap.
+    """
+    start = jnp.searchsorted(sorted_keys, lo)
+    end = jnp.searchsorted(sorted_keys, hi)
+    pos = start + jnp.arange(cap, dtype=start.dtype)
+    mask = pos < end
+    pos = jnp.clip(pos, 0, sorted_keys.shape[0] - 1)
+    return pos.astype(jnp.int32), mask

@@ -1,0 +1,115 @@
+"""Fused clock-tracker batch update in Pallas.
+
+The paper's tracker is a concurrent hash map updated on every Get/Put with
+atomics.  TPUs have no atomics, so we invert the loop (DESIGN.md §5): the
+grid walks *table tiles*; each step loads one tile of (keys, clock, loc)
+into VMEM plus the whole access batch, resolves every batch access landing
+in the tile with vectorized compares ([tile, B] bool algebra -- VPU work),
+and writes the tile back once.  One pass, no scatter conflicts, O(T/tile)
+sequential HBM traffic.
+
+Semantics = tracker.access_batched:
+  hit                -> clock = 3, loc = last access's loc
+  empty slot         -> insert last colliding key (clock 3 if the batch
+                        accessed it >= 2 times else 0)
+  occupied, clock>0  -> decay: clock -= 1 (resident key protected)
+  occupied, clock==0 -> evict: insert last colliding key
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.tracker import CLOCK_MAX
+
+
+def _hash_u32(x, salt: int):
+    muls = (2654435761, 2246822519, 3266489917, 668265263, 374761393)
+    x = x.astype(jnp.uint32)
+    x = x ^ jnp.uint32((salt * 0x9E3779B9) & 0xFFFFFFFF)
+    x = x * jnp.uint32(muls[salt % 5])
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(2246822519)
+    x = x ^ (x >> 13)
+    return x
+
+
+def _kernel(keys_ref, occ_ref, locs_ref, valid_ref, tk_ref, tc_ref, tl_ref,
+            ok_ref, oc_ref, ol_ref, *, table_size: int, tile: int):
+    t0 = pl.program_id(0) * tile
+    bkeys = keys_ref[...]                       # [B]
+    bocc = occ_ref[...]
+    blocs = locs_ref[...]
+    bvalid = valid_ref[...] != 0
+    slots = (_hash_u32(bkeys, 1) % jnp.uint32(table_size)).astype(jnp.int32)
+
+    tk = tk_ref[...]                            # [tile]
+    tc = tc_ref[...].astype(jnp.int32)
+    tl = tl_ref[...].astype(jnp.int32)
+
+    rows = t0 + jax.lax.broadcasted_iota(jnp.int32, (tile, bkeys.shape[0]), 0)
+    cand = (slots[None, :] == rows) & bvalid[None, :]      # [tile, B]
+    hit = cand & (bkeys[None, :] == tk[:, None])
+    any_cand = jnp.any(cand, axis=1)
+    any_hit = jnp.any(hit, axis=1)
+
+    # last valid candidate per row (ordered semantics: last write wins)
+    j = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
+    last_j = jnp.max(jnp.where(cand, j, -1), axis=1)       # [tile]
+    lj = jnp.clip(last_j, 0)
+    new_key = bkeys[lj]
+    new_occ = bocc[lj]
+    new_loc = blocs[lj].astype(jnp.int32)
+    hit_loc = blocs[jnp.clip(jnp.max(jnp.where(hit, j, -1), axis=1), 0)]
+
+    empty = tk < 0
+    protect = any_cand & ~any_hit & ~empty & (tc > 0)
+    insert = any_cand & ~any_hit & (empty | (tc == 0))
+
+    out_k = jnp.where(insert, new_key, tk)
+    out_c = jnp.where(any_hit, CLOCK_MAX,
+                      jnp.where(protect, tc - 1,
+                                jnp.where(insert,
+                                          jnp.where(new_occ >= 2, CLOCK_MAX, 0),
+                                          tc)))
+    out_l = jnp.where(any_hit, hit_loc.astype(jnp.int32),
+                      jnp.where(insert, new_loc, tl))
+    ok_ref[...] = out_k
+    oc_ref[...] = out_c.astype(jnp.int8)
+    ol_ref[...] = out_l.astype(jnp.int8)
+
+
+def clock_update(trk_keys, trk_clock, trk_loc, keys, occ, locs, valid, *,
+                 tile: int = 512, interpret: bool = False):
+    """Apply one access batch to the tracker tables.  Returns new tables."""
+    t = trk_keys.shape[0]
+    assert t % tile == 0
+    kern = functools.partial(_kernel, table_size=t, tile=tile)
+    grid = (t // tile,)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(keys.shape, lambda i: (0,)),
+            pl.BlockSpec(occ.shape, lambda i: (0,)),
+            pl.BlockSpec(locs.shape, lambda i: (0,)),
+            pl.BlockSpec(valid.shape, lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.int8),
+            jax.ShapeDtypeStruct((t,), jnp.int8),
+        ],
+        interpret=interpret,
+    )(keys, occ, locs, valid.astype(jnp.int32), trk_keys, trk_clock, trk_loc)

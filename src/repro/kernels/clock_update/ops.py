@@ -1,0 +1,31 @@
+"""Jit'd tracker-update wrapper with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tracker
+from repro.kernels.clock_update.clock_update import clock_update
+
+
+def _occurrences(keys, valid):
+    sk = jnp.where(valid, keys, jnp.int32(-1))
+    if keys.shape[0] <= 512:
+        return jnp.sum((sk[None, :] == sk[:, None]) & valid[None, :], axis=1)
+    from repro.core.tracker import _occ_large
+    return _occ_large(sk, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "tile", "interpret"))
+def tracker_access(state: tracker.TrackerState, keys, locs, valid, *,
+                   backend: str = "reference", tile: int = 512,
+                   interpret: bool = True) -> tracker.TrackerState:
+    if backend == "reference":
+        return tracker.access_batched(state, keys, locs, valid)
+    occ = _occurrences(keys, valid).astype(jnp.int32)
+    tk, tc, tl = clock_update(state.keys, state.clock, state.loc,
+                              keys, occ, locs.astype(jnp.int8), valid,
+                              tile=tile, interpret=interpret)
+    return tracker.TrackerState(tk, tc, tl)

@@ -1,0 +1,10 @@
+"""Oracle: the tracker's vectorized batch-update semantics."""
+from __future__ import annotations
+
+from repro.core import tracker
+
+
+def clock_update_ref(trk_keys, trk_clock, trk_loc, keys, locs, valid):
+    st = tracker.TrackerState(trk_keys, trk_clock, trk_loc)
+    out = tracker.access_batched(st, keys, locs, valid)
+    return out.keys, out.clock, out.loc

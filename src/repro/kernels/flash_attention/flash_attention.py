@@ -1,0 +1,107 @@
+"""Flash attention for TPU in Pallas: tiled online-softmax, causal +
+sliding-window + GQA.
+
+Layout decisions (TPU, not a CUDA port):
+  * grid = (batch*kv_head, q_blocks, k_blocks), k innermost so the running
+    (m, l, acc) state lives in VMEM scratch across the k sweep;
+  * q/k/v blocks are (block_q|block_k, head_dim) tiles with head_dim padded
+    to a multiple of 128 (MXU lane alignment) by ops.py;
+  * all matmuls accumulate in f32 via preferred_element_type;
+  * GQA folds the query-head group into the q-block rows: q is reshaped to
+    [B*Hkv, Sq*G, D] so one k/v stream serves all G query heads of a group
+    (a TPU-friendly alternative to replicating K/V); row r is token r//G.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k: int, group: int, sq: int, sk: int):
+    """sq/sk are LOGICAL lengths (padding masked off via positions)."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # [block_q, d]
+    k = k_ref[...].astype(jnp.float32)          # [block_k, d]
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    qi = pl.program_id(1)
+    row = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+    qpos = row // group + (sk - sq)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = kpos < sk
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # [block_q, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[...].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_folded(q, k, v, *, group: int, sq: int, sk: int,
+                           causal: bool = True, window: int = -1,
+                           scale: float, block_q: int = 256,
+                           block_k: int = 256, interpret: bool = False):
+    """q: [BHkv, R, D] with rows = token*group + head-in-group (padded);
+    k/v: [BHkv, Sk_pad, D].  sq/sk are logical (unpadded) lengths.
+    Requires R % block_q == 0, Sk_pad % block_k == 0, D % 128 == 0."""
+    bh, rows, d = q.shape
+    sk_pad = k.shape[1]
+    n_q = rows // block_q
+    n_k = sk_pad // block_k
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+        group=group, sq=sq, sk=sk)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

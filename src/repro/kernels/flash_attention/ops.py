@@ -1,0 +1,60 @@
+"""Jit'd public wrapper: padding, GQA folding, backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_folded
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "backend",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def mha(q, k, v, *, causal: bool = True, window: int = -1,
+        backend: str = "reference", block_q: int = 256, block_k: int = 256,
+        interpret: bool = True):
+    """Multi-head attention with GQA: q [B,Hq,Sq,D], k/v [B,Hkv,Sk,D].
+
+    backend="reference": XLA-fused jnp path (used by model lowering on CPU);
+    backend="pallas": the TPU kernel (interpret=True on CPU).
+    """
+    if backend == "reference":
+        return attention_ref(q, k, v, causal=causal, window=window)
+
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+
+    # fold GQA group into q rows: row = token*G + head_in_group
+    qg = q.reshape(b, hkv, g, sq, d)
+    qg = jnp.moveaxis(qg, 2, 3).reshape(b * hkv, sq * g, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+
+    # pad head dim to 128 lanes
+    dpad = (-d) % 128
+    if dpad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, dpad)))
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, dpad)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, dpad)))
+    # block_q must be a whole number of tokens (multiple of G)
+    bq = max((min(block_q, sq * g) // g) * g, g)
+    rpad = (-(sq * g)) % bq
+    if rpad:
+        qg = jnp.pad(qg, ((0, 0), (0, rpad), (0, 0)))
+    bk = min(block_k, max(sk, 128))
+    kpad = (-sk) % bk
+    if kpad:
+        kf = jnp.pad(kf, ((0, 0), (0, kpad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, kpad), (0, 0)))
+
+    out = flash_attention_folded(qg, kf, vf, group=g, sq=sq, sk=sk,
+                                 causal=causal, window=window, scale=scale,
+                                 block_q=bq, block_k=bk, interpret=interpret)
+    out = out[:, :sq * g, :d].reshape(b, hkv, sq, g, d)
+    return jnp.moveaxis(out, 3, 2).reshape(b, hq, sq, d)

@@ -1,0 +1,68 @@
+"""Mamba selective-scan in Pallas, chunked, channel-blocked.
+
+TPU layout: state h is [block_d, N] in VMEM scratch; grid =
+(batch, d_blocks, T/C) with the time axis innermost so h persists across
+chunks.  Channels are independent, so blocking d_inner both bounds VMEM
+and gives the VPU full lanes; N (=16) rides the sublane dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref, *,
+            chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...]                            # [bd, N]
+    dvec = d_ref[...]                         # [bd]
+
+    def step(i, _):
+        xt = x_ref[i, :]                      # [bd]
+        dtt = dt_ref[i, :]                    # [bd]
+        bt = b_ref[i, :]                      # [N]
+        ct = c_ref[i, :]                      # [N]
+        h = h_ref[...]                        # [bd, N]
+        da = jnp.exp(dtt[:, None] * a)
+        h = da * h + (dtt * xt)[:, None] * bt[None, :]
+        h_ref[...] = h
+        y = jnp.sum(h * ct[None, :], axis=1) + dvec * xt
+        y_ref[i, :] = y.astype(y_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, chunk, step, ())
+
+
+def mamba_scan(x, dt, A, B, C, D, *, block_d: int = 256, chunk: int = 64,
+               interpret: bool = False):
+    """x, dt: [Bb, T, Di]; A: [Di, N]; B, C: [Bb, T, N]; D: [Di] -> y."""
+    bb, t, di = x.shape
+    n = A.shape[1]
+    assert di % block_d == 0 and t % chunk == 0
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(bb, di // block_d, t // chunk),
+        in_specs=[
+            pl.BlockSpec((None, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((None, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, n), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((block_d,), lambda b, d, c: (d,)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, block_d),
+                               lambda b, d, c: (b, c, d)),
+        out_shape=jax.ShapeDtypeStruct((bb, t, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)

@@ -1,0 +1,28 @@
+"""Jit'd Mamba selective-scan wrapper with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_d", "chunk",
+                                             "interpret"))
+def selective_scan(x, dt, A, B, C, D, *, backend: str = "reference",
+                   block_d: int = 256, chunk: int = 64,
+                   interpret: bool = True):
+    if backend == "reference":
+        return mamba_ref(x, dt, A, B, C, D)
+    bb, t, di = x.shape
+    bd = min(block_d, di)
+    ch = min(chunk, t)
+    tpad = (-t) % ch
+    pad3 = lambda z: jnp.pad(z.astype(jnp.float32), ((0, 0), (0, tpad), (0, 0)))
+    y = mamba_scan(pad3(x), pad3(dt), A.astype(jnp.float32), pad3(B), pad3(C),
+                   D.astype(jnp.float32), block_d=bd, chunk=ch,
+                   interpret=interpret)
+    return y[:, :t].astype(x.dtype)

@@ -1,0 +1,33 @@
+"""Oracle: Mamba selective-SSM recurrence (S6).
+
+Per channel c (d_inner channels) with state size N:
+  h_t = exp(dt_t[c] * A[c]) * h_{t-1} + dt_t[c] * B_t * x_t[c]
+  y_t[c] = C_t . h_t + D[c] * x_t[c]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_ref(x, dt, A, B, C, D):
+    """x, dt: [Bb, T, Di]; A: [Di, N]; B, C: [Bb, T, N]; D: [Di].
+    Returns y: [Bb, T, Di]."""
+    bb, t, di = x.shape
+    n = A.shape[1]
+
+    def seq_scan(x1, dt1, b1, c1):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            da = jnp.exp(dtt[:, None] * A)             # [Di, N]
+            h = da * h + (dtt * xt)[:, None] * bt[None, :]
+            y = jnp.sum(h * ct[None, :], axis=1) + D * xt
+            return h, y
+        h0 = jnp.zeros((di, n), jnp.float32)
+        _, y = jax.lax.scan(step, h0, (x1, dt1, b1, c1))
+        return y
+
+    f = jax.vmap(seq_scan)
+    y = f(x.astype(jnp.float32), dt.astype(jnp.float32),
+          B.astype(jnp.float32), C.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -1,0 +1,65 @@
+"""approx-MSC candidate scoring in Pallas.
+
+One fused VMEM pass: the per-bucket statistics ([B] vectors + the [B, 4]
+clock histogram) are loaded once; the [K, B] coverage-weight matrix is
+built with iotas and all weighted sums become two small matmuls on the
+MXU ([K,B] x [B,4] and [K,B] x [B,3]).  Runs every compaction tick, so it
+must not touch HBM more than once -- this is the kernel that makes
+approx-MSC ~free compared to precise-MSC's index walks (paper Fig. 6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(lo_ref, hi_ref, tf_ref, nf_ref, ns_ref, ov_ref, h_ref, probs_ref,
+            out_ref, *, bucket_width: int, nb: int, k: int):
+    lo = lo_ref[...].astype(jnp.float32)                 # [K]
+    hi = hi_ref[...].astype(jnp.float32)
+    tf_in = tf_ref[...].astype(jnp.float32)
+    edges = jax.lax.broadcasted_iota(jnp.float32, (k, nb), 1) * bucket_width
+    inter = (jnp.minimum(edges + bucket_width, hi[:, None])
+             - jnp.maximum(edges, lo[:, None]))
+    w = jnp.clip(inter / float(bucket_width), 0.0, 1.0)  # [K, B]
+
+    nf = nf_ref[...].astype(jnp.float32)
+    ns = ns_ref[...].astype(jnp.float32)
+    ov = ov_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)                   # [B, 4]
+    probs = probs_ref[...]                               # [4]
+    tracked = jnp.sum(h, axis=1)
+    untracked = jnp.maximum(nf - tracked, 0.0)
+    inv = 1.0 / (jax.lax.broadcasted_iota(jnp.float32, (4,), 0) + 1.0)
+
+    # pack the three [B] reductions + histogram terms into matmuls
+    rhs = jnp.stack([h @ inv + untracked, nf, h @ probs, ns, ov], axis=1)
+    sums = jax.lax.dot_general(w, rhs, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # [K, 5]
+    benefit, t_n, pinned, wns, wov = (sums[:, 0], sums[:, 1], sums[:, 2],
+                                      sums[:, 3], sums[:, 4])
+    p = jnp.clip(pinned / jnp.maximum(t_n, 1.0), 0.0, 0.999)
+    tf_est = jnp.maximum(wns, tf_in)
+    o = jnp.clip(wov / jnp.maximum(tf_est, 1.0), 0.0, 1.0)
+    f = tf_est / jnp.maximum(t_n, 1.0)
+    cost = f * (2.0 - o) / (1.0 - p) + 1.0
+    out_ref[...] = jnp.where(t_n > 0, benefit / cost, 0.0)
+
+
+def msc_scores(lo, hi, t_f, bucket_fast, bucket_slow, bucket_overlap, bhist,
+               probs, *, bucket_width: int, interpret: bool = False):
+    k = lo.shape[0]
+    nb = bucket_fast.shape[0]
+    kern = functools.partial(_kernel, bucket_width=bucket_width, nb=nb, k=k)
+    full = lambda shape: pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        kern,
+        in_specs=[full((k,)), full((k,)), full((k,)), full((nb,)),
+                  full((nb,)), full((nb,)), full((nb, 4)), full((4,))],
+        out_specs=full((k,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=interpret,
+    )(lo, hi, t_f, bucket_fast, bucket_slow, bucket_overlap, bhist, probs)

@@ -1,0 +1,20 @@
+"""Jit'd approx-MSC scoring wrapper."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.msc_score.msc_score import msc_scores
+from repro.kernels.msc_score.ref import msc_scores_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_width", "backend",
+                                             "interpret"))
+def score_candidates(lo, hi, t_f, bucket_fast, bucket_slow, bucket_overlap,
+                     bhist, probs, *, bucket_width: int,
+                     backend: str = "reference", interpret: bool = True):
+    fn = msc_scores_ref if backend == "reference" else functools.partial(
+        msc_scores, interpret=interpret)
+    return fn(lo, hi, t_f, bucket_fast, bucket_slow, bucket_overlap, bhist,
+              probs, bucket_width=bucket_width)

@@ -1,0 +1,33 @@
+"""Oracle: approx-MSC scoring of k candidate ranges (Eq. 1, bucketized)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def msc_scores_ref(lo, hi, t_f, bucket_fast, bucket_slow, bucket_overlap,
+                   bhist, probs, *, bucket_width: int):
+    """lo/hi/t_f: [K]; bucket_*: [B]; bhist: [B,4]; probs: [4] -> scores [K]."""
+    nb = bucket_fast.shape[0]
+    edges_lo = jnp.arange(nb, dtype=jnp.int32) * bucket_width
+    edges_hi = edges_lo + bucket_width
+    inter = (jnp.minimum(edges_hi[None, :], hi[:, None])
+             - jnp.maximum(edges_lo[None, :], lo[:, None])).astype(jnp.float32)
+    w = jnp.clip(inter / float(bucket_width), 0.0, 1.0)      # [K, B]
+
+    nf = bucket_fast.astype(jnp.float32)
+    ns = bucket_slow.astype(jnp.float32)
+    ov = bucket_overlap.astype(jnp.float32)
+    h = bhist.astype(jnp.float32)
+    tracked = jnp.sum(h, axis=1)
+    untracked = jnp.maximum(nf - tracked, 0.0)
+    inv = 1.0 / (jnp.arange(4, dtype=jnp.float32) + 1.0)
+
+    benefit = w @ (h @ inv + untracked)
+    t_n = w @ nf
+    pinned = w @ (h @ probs)
+    p = jnp.clip(pinned / jnp.maximum(t_n, 1.0), 0.0, 0.999)
+    tf_est = jnp.maximum(w @ ns, t_f.astype(jnp.float32))
+    o = jnp.clip((w @ ov) / jnp.maximum(tf_est, 1.0), 0.0, 1.0)
+    f = tf_est / jnp.maximum(t_n, 1.0)
+    cost = f * (2.0 - o) / (1.0 - p) + 1.0
+    return jnp.where(t_n > 0, benefit / cost, 0.0)

@@ -1,0 +1,25 @@
+"""Jit'd wrapper for paged decode attention with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def decode_attention(q, k_pages, v_pages, block_tables, token_mask, *,
+                     backend: str = "reference", interpret: bool = True):
+    """Decode-step attention over selected KV pages.
+
+    q: [B, Hq, D]; pools [P, T, Hkv, D]; block_tables [B, K];
+    token_mask [B, K, T].  backend="reference" is the XLA path used in
+    model lowering; "pallas" is the TPU kernel (interpret on CPU)."""
+    if backend == "reference":
+        return paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   token_mask)
+    return paged_attention(q, k_pages, v_pages, block_tables, token_mask,
+                           interpret=interpret)

@@ -1,0 +1,107 @@
+"""Paged decode attention for TPU in Pallas.
+
+The PrismDB-on-TPU read path: one new query token attends to the top-k
+selected KV pages of its sequence, resident in the HBM page pool, through
+block-table indirection.
+
+TPU adaptation notes (DESIGN.md §5):
+  * the block table rides in scalar-prefetch memory (SMEM), so the index
+    of page j+1 is known while page j's dot products run -- Pallas
+    overlaps the next page's HBM->VMEM DMA with compute (the paper's
+    "index one tier up, payloads stream" rule);
+  * grid = (batch, pages); the online-softmax state (m, l, acc) persists
+    in VMEM scratch across the page sweep;
+  * GQA handled by batching the group dimension onto the MXU via
+    dot_general batch dims -- no K/V replication.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, n_pages: int, scale: float, hkv: int, group: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = pl.program_id(0)
+    page_ok = bt_ref[b, j] >= 0
+
+    q = q_ref[...].astype(jnp.float32) * scale        # [Hkv*G, D]
+    d = q.shape[-1]
+    qh = q.reshape(hkv, group, d)
+    k = k_ref[...].astype(jnp.float32)                # [T, Hkv, D]
+    v = v_ref[...].astype(jnp.float32)
+    kh = jnp.swapaxes(k, 0, 1)                        # [Hkv, T, D]
+    vh = jnp.swapaxes(v, 0, 1)
+    s = jax.lax.dot_general(qh, kh, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)  # [Hkv,G,T]
+    ok = (mask_ref[...] != 0) & page_ok               # [T]
+    s = jnp.where(ok[None, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [Hkv, G, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.where(ok[None, None, :], jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, vh, (((2,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)  # [Hkv,G,D]
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _fin():
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = o.reshape(hkv * group, d).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, token_mask, *,
+                    scale: float | None = None, interpret: bool = False):
+    """q: [B, Hq, D]; pools [P, T, Hkv, D]; block_tables [B, K] (int32,
+    -1 absent); token_mask [B, K, T] (int32/bool).  Returns [B, Hq, D]."""
+    b, hq, d = q.shape
+    p, t, hkv, _ = k_pages.shape
+    kpages = block_tables.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    kern = functools.partial(_kernel, n_pages=kpages, scale=scale,
+                             hkv=hkv, group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kpages),
+        in_specs=[
+            pl.BlockSpec((None, hq, d), lambda i, j, bt: (i, 0, 0)),
+            pl.BlockSpec((None, t, hkv, d),
+                         lambda i, j, bt: (jnp.maximum(bt[i, j], 0), 0, 0, 0)),
+            pl.BlockSpec((None, t, hkv, d),
+                         lambda i, j, bt: (jnp.maximum(bt[i, j], 0), 0, 0, 0)),
+            pl.BlockSpec((None, None, t), lambda i, j, bt: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, hq, d), lambda i, j, bt: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, group, 1), jnp.float32),
+            pltpu.VMEM((hkv, group, 1), jnp.float32),
+            pltpu.VMEM((hkv, group, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), q, k_pages, v_pages,
+      token_mask.astype(jnp.int32))

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for paged decode attention over a page pool."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, token_mask,
+                        scale: float | None = None):
+    """q: [B, Hq, D]; pools: [P, T, Hkv, D]; block_tables: [B, K] slots
+    (-1 = absent); token_mask: [B, K, T] bool.  Returns [B, Hq, D]."""
+    b, hq, d = q.shape
+    p, t, hkv, _ = k_pages.shape
+    k_ = block_tables.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    slots = jnp.clip(block_tables, 0)
+    kk = k_pages[slots]                       # [B, K, T, Hkv, D]
+    vv = v_pages[slots]
+    mask = token_mask & (block_tables >= 0)[..., None]
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkthd->bhgkt", qf, kk.astype(jnp.float32))
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    s = s.reshape(b, hkv, g, k_ * t)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    pr = jnp.exp(s - m)
+    pr = jnp.where(jnp.isfinite(s), pr, 0.0)
+    den = jnp.maximum(jnp.sum(pr, axis=-1, keepdims=True), 1e-30)
+    pr = (pr / den).reshape(b, hkv, g, k_, t)
+    o = jnp.einsum("bhgkt,bkthd->bhgd", pr, vv.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Jit'd RWKV6 WKV wrapper with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.ref import rwkv6_ref
+from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "chunk", "interpret"))
+def wkv(r, k, v, w, u, *, backend: str = "reference", chunk: int = 64,
+        interpret: bool = True):
+    """r,k,v,w: [B, H, T, D]; u: [H, D] -> [B, H, T, D]."""
+    if backend == "reference":
+        return rwkv6_ref(r, k, v, w, u)
+    b, h, t, d = r.shape
+    pad = (-t) % chunk
+    fold = lambda x: jnp.pad(
+        x.astype(jnp.float32).reshape(b * h, t, d),
+        ((0, 0), (0, pad), (0, 0)))
+    # pad decay with ones so padded steps keep the state unchanged
+    wpad = jnp.pad(w.astype(jnp.float32).reshape(b * h, t, d),
+                   ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    uu = jnp.broadcast_to(u.astype(jnp.float32), (b, h, d)).reshape(b * h, d)
+    out = rwkv6_scan(fold(r), fold(k), fold(v), wpad, uu,
+                     chunk=min(chunk, t + pad), interpret=interpret)
+    return out[:, :t].reshape(b, h, t, d).astype(r.dtype)

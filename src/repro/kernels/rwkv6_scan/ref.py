@@ -1,0 +1,34 @@
+"""Oracle: RWKV-6 (Finch) WKV recurrence with data-dependent decay.
+
+Per head (d = head dim), state S in R^{d x d}:
+  o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(log_w_t)) in (0, 1), data-dependent per channel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, w, u):
+    """r,k,v,w: [B, H, T, D] (w = decay in (0,1)); u: [H, D] -> [B, H, T, D]."""
+    b, h, t, d = r.shape
+
+    def head_scan(r1, k1, v1, w1, u1):
+        def step(s, x):
+            rt, kt, vt, wt = x
+            kv = jnp.outer(kt, vt)
+            o = (s + u1[:, None] * kv).T @ rt
+            s = wt[:, None] * s + kv
+            return s, o
+        s0 = jnp.zeros((d, d), jnp.float32)
+        _, o = jax.lax.scan(step, s0, (r1, k1, v1, w1))
+        return o
+
+    f = jax.vmap(jax.vmap(head_scan, in_axes=(0, 0, 0, 0, 0)),
+                 in_axes=(0, 0, 0, 0, 0))
+    ub = jnp.broadcast_to(u.astype(jnp.float32), (b, h, d))
+    out = f(r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w.astype(jnp.float32), ub)
+    return out.astype(r.dtype)

@@ -1,0 +1,63 @@
+"""RWKV-6 WKV recurrence in Pallas, chunked for VMEM.
+
+TPU adaptation: the recurrence is sequential in t but dense in the
+(d x d) state, so the kernel keeps S resident in VMEM scratch across the
+whole time sweep (grid = (B*H, T/C)); each grid step streams one chunk of
+r/k/v/w through the VPU with a fori_loop of rank-1 updates.  The state
+never round-trips to HBM (the win over a lax.scan whose carry is spilled
+per step), and chunks give the pipeline long DMA windows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[...]                            # [D]
+
+    def step(i, _):
+        rt = r_ref[i, :]                      # [D]
+        kt = k_ref[i, :]
+        vt = v_ref[i, :]
+        wt = w_ref[i, :]
+        s = s_ref[...]                        # [D, D]
+        kv = kt[:, None] * vt[None, :]
+        o = jnp.sum((s + u[:, None] * kv) * rt[:, None], axis=0)
+        o_ref[i, :] = o.astype(o_ref.dtype)
+        s_ref[...] = wt[:, None] * s + kv
+        return ()
+
+    jax.lax.fori_loop(0, chunk, step, ())
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w: [BH, T, D] f32; u: [BH, D].  T % chunk == 0."""
+    bh, t, d = r.shape
+    n_c = t // chunk
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_c),
+        in_specs=[
+            pl.BlockSpec((None, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, d), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, d), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), r.dtype),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,37 @@
+"""Jit'd wrapper: apply a core Movement to a payload pool pair."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tier_compact.ref import gather_rows_ref, scatter_rows_ref
+from repro.kernels.tier_compact.tier_compact import gather_rows, scatter_rows
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def apply_movement_rows(fast_pool, slow_pool, mv, *,
+                        backend: str = "reference", interpret: bool = True):
+    """Replay a compaction Movement on flat row pools [P, W].
+
+    Returns (fast_pool', slow_pool').  This is the whole data path of one
+    compaction: gather merged sources (random reads), sequential-write the
+    new run into the slow pool, and promote hot rows back into fast slots.
+    """
+    gr = gather_rows_ref if backend == "reference" else \
+        functools.partial(gather_rows, interpret=interpret)
+    sc = scatter_rows_ref if backend == "reference" else \
+        (lambda pool, idx, rows, valid: scatter_rows(
+            pool, idx, rows, valid, interpret=interpret))
+
+    src = mv.m_src_slot
+    from_fast = gr(fast_pool, jnp.clip(src, 0, fast_pool.shape[0] - 1))
+    from_slow = gr(slow_pool, jnp.clip(src, 0, slow_pool.shape[0] - 1))
+    rows = jnp.where((mv.m_src_tier == 0)[:, None], from_fast, from_slow)
+    # promotions read their ORIGINAL slow slots -- gather before the new run
+    # overwrites recycled slots.
+    pro = gr(slow_pool, jnp.clip(mv.p_src_slot, 0, slow_pool.shape[0] - 1))
+    slow_pool = sc(slow_pool, mv.m_dst_slot, rows, mv.m_valid)
+    fast_pool = sc(fast_pool, mv.p_dst_slot, pro, mv.p_valid)
+    return fast_pool, slow_pool

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the tier-compaction data movers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_rows_ref(pool, idx):
+    """pool: [P, W]; idx: [M] (clipped; caller masks).  -> [M, W]"""
+    return pool[jnp.clip(idx, 0, pool.shape[0] - 1)]
+
+
+def scatter_rows_ref(pool, idx, rows, valid):
+    """Write rows[i] -> pool[idx[i]] where valid[i] (idx unique)."""
+    tgt = jnp.where(valid, idx, pool.shape[0])
+    return pool.at[tgt].set(rows, mode="drop")

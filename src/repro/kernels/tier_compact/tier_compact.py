@@ -1,0 +1,76 @@
+"""Tier-compaction data movers in Pallas.
+
+Compaction's physical I/O is: random-gather cold pages from the HBM slab
+pool, then one long *sequential* write of the merged run into the slow
+tier (host memory over PCIe).  On TPU we express both halves as Pallas
+kernels with scalar-prefetched indices, so the DMA for row i+1 issues
+while row i is in flight -- the TPU analogue of the paper's sequential
+flash writes (descriptor-friendly, no per-object host syscalls):
+
+  * gather_rows:  out[i] = pool[src_idx[i]]   (random read, streaming write)
+  * scatter_rows: pool[dst_idx[i]] = rows[i]  (streaming read, indexed write,
+                                               in-place via input/output
+                                               aliasing)
+
+Rows are whole page payloads (flattened [W] lanes, W % 128 == 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def gather_rows(pool, idx, *, interpret: bool = False):
+    """pool [P, W], idx [M] -> [M, W]; idx pre-clipped to [0, P)."""
+    m = idx.shape[0]
+    w = pool.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[pl.BlockSpec((None, w), lambda i, idx: (idx[i], 0))],
+        out_specs=pl.BlockSpec((None, w), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, w), pool.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), pool)
+
+
+def _scatter_kernel(idx_ref, rows_ref, pool_hbm_ref, pool_out_ref):
+    del pool_hbm_ref  # aliased with the output; never read as blocks
+    pool_out_ref[...] = rows_ref[...]
+
+
+def scatter_rows(pool, idx, rows, valid, *, interpret: bool = False):
+    """pool [P, W] <- rows [M, W] at idx [M] where valid; in-place alias.
+
+    Valid destination indices must be unique (compaction allocates distinct
+    slots).  Invalid entries are redirected to a dummy row P appended to the
+    pool (a grid step always writes its out block back, on TPU and in
+    interpret mode alike -- masking inside the kernel cannot suppress the
+    writeback, so we give masked writes a trash destination instead)."""
+    m, w = rows.shape
+    p = pool.shape[0]
+    pool_pad = jnp.concatenate([pool, jnp.zeros((1, w), pool.dtype)], axis=0)
+    safe_idx = jnp.where(valid, idx, p).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[pl.BlockSpec((None, w), lambda i, idx: (i, 0)),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((None, w), lambda i, idx: (idx[i], 0)),
+    )
+    out = pl.pallas_call(
+        _scatter_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool_pad.shape, pool.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(safe_idx, rows, pool_pad)
+    return out[:p]

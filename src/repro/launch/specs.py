@@ -1,0 +1,59 @@
+"""Input builders: ShapeDtypeStruct stand-ins (dry-run) and concrete
+random batches (smoke tests) for every (arch x shape) cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct inputs for train_step / prefill; decode uses
+    decode_specs().  Frontend-stub archs (vlm/audio) get embeddings."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.family == "audio":
+        out["enc_embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_seq,
+                                                  cfg.d_model), jnp.bfloat16)
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif cfg.embed_inputs:
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                             jnp.bfloat16)
+        if cfg.m_rope:
+            out["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def concrete_batch(cfg: ModelConfig, shape_kind: str, batch: int, seq: int,
+                   rng: jax.Array) -> dict:
+    """Small concrete batch for CPU smoke tests."""
+    r1, r2, r3 = jax.random.split(rng, 3)
+    out: dict = {}
+    if cfg.family == "audio":
+        out["enc_embeds"] = jax.random.normal(
+            r1, (batch, cfg.enc_seq, cfg.d_model), jnp.float32) * 0.02
+        out["tokens"] = jax.random.randint(r2, (batch, seq), 0, cfg.vocab)
+    elif cfg.embed_inputs:
+        out["embeds"] = jax.random.normal(
+            r1, (batch, seq, cfg.d_model), jnp.float32) * 0.02
+        if cfg.m_rope:
+            t = jnp.arange(seq)[None].repeat(batch, 0)
+            out["positions"] = jnp.stack([t, t % 7, t % 5], axis=-1)
+    else:
+        out["tokens"] = jax.random.randint(r2, (batch, seq), 0, cfg.vocab)
+    if shape_kind == "train":
+        out["labels"] = jax.random.randint(r3, (batch, seq), 0, cfg.vocab)
+    return out

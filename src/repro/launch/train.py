@@ -1,0 +1,79 @@
+"""Training launcher: real steps on the local mesh (CPU: reduced configs;
+TPU: full).  The dry-run (dryrun.py) is the at-scale counterpart.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --steps 20 \
+      --reduced --batch 8 --seq 128 [--checkpoint-dir ckpt] [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch, reduced
+from repro.train import checkpoint as ckpt_mod
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train import trainer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mcfg = get_arch(args.arch)
+    if args.reduced:
+        mcfg = reduced(mcfg)
+    tcfg = T.TrainConfig(
+        micro_batches=args.micro_batches,
+        adamw=opt_mod.AdamWConfig(lr=args.lr, warmup_steps=5,
+                                  total_steps=args.steps))
+    dcfg = data_mod.DataConfig(seed=args.seed, batch=args.batch,
+                               seq_len=args.seq, vocab=mcfg.vocab)
+
+    state, specs = T.init_state(mcfg, tcfg, jax.random.PRNGKey(args.seed))
+    start = 0
+    mgr = None
+    if args.checkpoint_dir:
+        mgr = ckpt_mod.CheckpointManager(args.checkpoint_dir)
+        if args.resume and mgr.latest_step() is not None:
+            state = mgr.restore()
+            start = int(state.opt.step)
+            print(f"resumed from step {start}")
+
+    step_fn = jax.jit(T.make_train_step(mcfg, tcfg))
+    losses = []
+    for step in range(start, args.steps):
+        batch = data_mod.model_batch(dcfg, mcfg, step)
+        t0 = time.time()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        print(f"step {step:5d} loss {loss:8.4f} "
+              f"gnorm {float(metrics['grad_norm']):8.3f} "
+              f"dt {time.time() - t0:6.2f}s")
+        if mgr and (step + 1) % args.checkpoint_every == 0:
+            mgr.save(step + 1, state)
+    if mgr:
+        mgr.save(args.steps, state, blocking=True)
+    if len(losses) > 5:
+        assert losses[-1] < losses[0], "loss did not improve"
+        print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

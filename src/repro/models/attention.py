@@ -1,0 +1,198 @@
+"""GQA attention layers: train/prefill path + decode path with KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels.flash_attention.ops import mha
+from repro.models.common import (ParamFactory, apply_m_rope, apply_rope,
+                                 split_tree)
+
+
+def init_attention(pf: ParamFactory, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    tree = {
+        "wq": pf.dense((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": pf.dense((d, cfg.n_kv_heads, hd),
+                       ("embed", "kv_heads", "head_dim")),
+        "wv": pf.dense((d, cfg.n_kv_heads, hd),
+                       ("embed", "kv_heads", "head_dim")),
+        "wo": pf.dense((cfg.n_heads, hd, d), ("heads", "head_dim", "embed"),
+                       scale=1.0 / (cfg.n_heads * hd) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        tree["bq"] = pf.zeros((cfg.n_heads, hd), ("heads", "head_dim"))
+        tree["bk"] = pf.zeros((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"))
+        tree["bv"] = pf.zeros((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"))
+    return split_tree(tree)
+
+
+def _qkv(params, cfg: ModelConfig, x, positions):
+    """x: [B, S, D] -> q [B,Hq,S,hd], k/v [B,Hkv,S,hd] (RoPE applied)."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"][None, :, None, :]
+        k = k + params["bk"][None, :, None, :]
+        v = v + params["bv"][None, :, None, :]
+    if cfg.m_rope:
+        if positions.ndim == 2:      # text-only decode: t = h = w = pos
+            positions = jnp.broadcast_to(positions[..., None],
+                                         (*positions.shape, 3))
+        q = apply_m_rope(q, positions, cfg.m_rope_sections, cfg.rope_theta)
+        k = apply_m_rope(k, positions, cfg.m_rope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(params, cfg: ModelConfig, x, positions, window: jax.Array,
+              *, causal: bool = True, backend: str = "reference"):
+    """Train/prefill self-attention.  `window` may be a traced scalar
+    (-1 = global); local layers differ from global ones only by masking,
+    which lets dense archs scan over stacked layers with a per-layer
+    window array (gemma3's 5:1 schedule)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    q = constrain(q, ("batch", "heads", "seq", "head_dim"))
+    k = constrain(k, ("batch", "kv_heads", "seq", "head_dim"))
+    pos1d = positions[..., 0] if positions.ndim == 3 else positions
+    if backend == "reference":
+        o = _masked_attention(q, k, v, pos1d, window, causal)
+    else:
+        o = mha(q, k, v, causal=causal, window=int(window),
+                backend=backend)
+    o = constrain(o, ("batch", "heads", "seq", "head_dim"))
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+
+def banded_attention(params, cfg: ModelConfig, x, positions, window: int,
+                     causal: bool = True):
+    """Local attention computed in a 2w band (§Perf hillclimb B).
+
+    The masked reference path computes full S^2 scores for windowed layers
+    and throws most away; blocking by the (STATIC) window computes only
+    S x 2w: query block i attends key blocks {i-1, i}.  4x less attention
+    compute + activation memory for gemma3's local layers at S=4k, w=512.
+    Assumes contiguous positions (training layout)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    w = int(window)
+    pad = (-s) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nb = sp // w
+    qb = (q.astype(jnp.float32) * hd ** -0.5) \
+        .reshape(b, hkv, g, nb, w, hd)
+    kb = k.astype(jnp.float32).reshape(b, hkv, nb, w, hd)
+    vb = v.astype(jnp.float32).reshape(b, hkv, nb, w, hd)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]],
+                            axis=2)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]],
+                            axis=2)
+    kband = jnp.concatenate([kprev, kb], axis=3)        # [b,hkv,nb,2w,hd]
+    vband = jnp.concatenate([vprev, vb], axis=3)
+    sc = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qb, kband)  # [b,hkv,g,nb,w,2w]
+    r = jnp.arange(w)[:, None]
+    j = jnp.arange(2 * w)[None, :]
+    rel = j - (r + w)                                    # kpos - qpos
+    mask = (rel <= 0) & (rel > -w)
+    first = jnp.arange(nb)[:, None, None] == 0
+    mask = mask[None] & ~(first & (j[None] < w))         # block 0: no prev
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgnqk,bhnkd->bhgnqd", p, vband)
+    o = o.reshape(b, hq, sp, hd)[:, :, :s].astype(x.dtype)
+    o = constrain(o, ("batch", "heads", "seq", "head_dim"))
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+
+def _masked_attention(q, k, v, positions, window, causal):
+    """Reference attention with dynamic window (traced scalar)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32))
+    qpos = positions[:, None, None, :, None]
+    kpos = positions[:, None, None, None, :]
+    mask = jnp.ones((b, 1, 1, sq, sq), bool)
+    if causal:
+        mask &= kpos <= qpos
+    mask &= (window < 0) | (kpos > qpos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention_dense(params, cfg: ModelConfig, x, cache_k, cache_v,
+                           pos, window: jax.Array):
+    """One-token decode against a dense KV cache.
+
+    x: [B, 1, D]; cache_k/v: [B, Hkv, S_max, hd]; pos: [B] current length.
+    Returns (out [B, 1, D], new_k, new_v)."""
+    b, _, d = x.shape
+    hkv, s_max, hd = cache_k.shape[1], cache_k.shape[2], cache_k.shape[3]
+    q, k, v = _qkv(params, cfg, x, pos[:, None])
+    # append new kv at pos
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, :, pos].set(k[:, :, 0])
+    cache_v = cache_v.at[bidx, :, pos].set(v[:, :, 0])
+    g = cfg.n_heads // hkv
+    qf = (q.astype(jnp.float32) * (hd ** -0.5)).reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, cache_k.astype(jnp.float32))
+    kpos = jnp.arange(s_max)[None, None, None, :]
+    ok = kpos <= pos[:, None, None, None]
+    ok &= (window < 0) | (kpos > (pos[:, None, None, None] - window))
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, cache_v.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.n_heads, hd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o.reshape(b, 1, cfg.n_heads, hd),
+                     params["wo"])
+    return out, cache_k, cache_v
+
+
+def init_cross_attention(pf: ParamFactory, cfg: ModelConfig):
+    return init_attention(pf, cfg)
+
+
+def cross_attention_cached(params, cfg: ModelConfig, x, xk, xv):
+    """Decode-step cross-attention: q from x [B,1,D]; k/v precomputed
+    encoder projections [B, Hkv, S_enc, hd] (immutable pages -- the classic
+    cold-able KV in the tiered cache)."""
+    b = x.shape[0]
+    hkv, s_enc, hd = xk.shape[1], xk.shape[2], xk.shape[3]
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    g = cfg.n_heads // hkv
+    qf = (q[:, :, 0].astype(jnp.float32) * hd ** -0.5).reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, xk.astype(jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, xv.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.n_heads, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def cross_attention(params, cfg: ModelConfig, x, enc_out):
+    """Decoder cross-attention (whisper): queries from x, kv from encoder."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wv"])
+    b, hq, sq, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = (q.astype(jnp.float32) * (hd ** -0.5)).reshape(b, hkv, g, sq, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    o = o.reshape(b, hq, sq, hd).astype(x.dtype)
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])

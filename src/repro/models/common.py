@@ -1,0 +1,169 @@
+"""Shared model building blocks: norms, RoPE/M-RoPE, FFN, param factory.
+
+Params are plain nested dicts of jnp arrays; every init function also emits
+a mirror dict of *logical axis names* per leaf, which distributed/sharding.py
+maps onto the mesh (MaxText-style logical axis rules).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Specs = dict
+
+
+class ParamFactory:
+    """Builds params + logical-axis specs together; splits rng per leaf."""
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        self.rng = rng
+        self.dtype = dtype
+
+    def split(self) -> jax.Array:
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def dense(self, shape, logical, scale: float | None = None):
+        scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+        w = jax.random.normal(self.split(), shape, self.dtype) * scale
+        return w, tuple(logical)
+
+    def embed(self, shape, logical, scale: float = 0.02):
+        w = jax.random.normal(self.split(), shape, self.dtype) * scale
+        return w, tuple(logical)
+
+    def zeros(self, shape, logical):
+        return jnp.zeros(shape, self.dtype), tuple(logical)
+
+    def ones(self, shape, logical):
+        return jnp.ones(shape, self.dtype), tuple(logical)
+
+    def const(self, value, logical):
+        return jnp.asarray(value, self.dtype), tuple(logical)
+
+
+def split_tree(pairs: dict) -> tuple[Params, Specs]:
+    """{'name': (array, spec) | nested dict} -> (params, specs)."""
+    params, specs = {}, {}
+    for k, v in pairs.items():
+        if isinstance(v, dict):
+            params[k], specs[k] = split_tree(v)
+        else:
+            params[k], specs[k] = v
+    return params, specs
+
+
+# ------------------------------------------------------------------- norms
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)) \
+        .astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)) \
+        .astype(dt)
+
+
+def group_norm(x, weight, bias, groups: int, eps: float = 1e-5):
+    """x: [..., d]; normalize within `groups` channel groups."""
+    dt = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, groups, d // groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)) \
+        .astype(dt)
+
+
+# -------------------------------------------------------------------- rope
+
+def rope_freqs(d_head: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [B, H, S, D]; positions: [B, S] (int).  Rotates pairs (even, odd)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                         # [D/2]
+    ang = positions[:, None, :, None].astype(jnp.float32) * inv  # [B,1,S,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x, positions3, sections, theta: float = 10000.0):
+    """Qwen2-VL M-RoPE: positions3 [B, S, 3] = (t, h, w) ids; the head dim's
+    rotary pairs are split into `sections` (t/h/w) each rotated by its own
+    position stream."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                         # [D/2]
+    sec = jnp.zeros((d // 2,), jnp.int32)
+    s0, s1, _ = sections
+    idx = jnp.arange(d // 2)
+    sec = jnp.where(idx < s0, 0, jnp.where(idx < s0 + s1, 1, 2))
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec[None, None, :], (*positions3.shape[:2], d // 2)),
+        axis=2)                                        # [B, S, D/2]
+    ang = pos[:, None] * inv                           # [B, 1, S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- ffn
+
+def init_ffn(pf: ParamFactory, d_model: int, d_ff: int, kind: str):
+    if kind == "swiglu":
+        return split_tree({
+            "w_gate": pf.dense((d_model, d_ff), ("embed", "mlp")),
+            "w_up": pf.dense((d_model, d_ff), ("embed", "mlp")),
+            "w_down": pf.dense((d_ff, d_model), ("mlp", "embed")),
+        })
+    return split_tree({
+        "w_up": pf.dense((d_model, d_ff), ("embed", "mlp")),
+        "b_up": pf.zeros((d_ff,), ("mlp",)),
+        "w_down": pf.dense((d_ff, d_model), ("mlp", "embed")),
+        "b_down": pf.zeros((d_model,), ("embed",)),
+    })
+
+
+def ffn(params, x, kind: str, act: str = "silu"):
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if kind == "swiglu":
+        h = actf(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    h = actf(x @ params["w_up"] + params["b_up"])
+    return h @ params["w_down"] + params["b_down"]
+
+
+def init_norm(pf: ParamFactory, d: int, kind: str):
+    if kind == "rms":
+        return split_tree({"w": pf.ones((d,), ("embed",))})
+    return split_tree({"w": pf.ones((d,), ("embed",)),
+                       "b": pf.zeros((d,), ("embed",))})
+
+
+def norm(params, x, kind: str, eps: float):
+    if kind == "rms":
+        return rms_norm(x, params["w"], eps)
+    return layer_norm(x, params["w"], params["b"], eps)

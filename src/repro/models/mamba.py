@@ -1,0 +1,83 @@
+"""Mamba selective-SSM block (arXiv:2312.00752), used by Jamba's 7/8 layers.
+
+in_proj -> (x, z); short causal conv; SiLU; data-dependent (dt, B, C);
+selective scan (kernels/mamba_scan); gate by SiLU(z); out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.mamba_scan.ops import selective_scan
+from repro.models.common import ParamFactory, split_tree
+
+
+def init_mamba_layer(pf: ParamFactory, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = max(d // 16, 8)
+    return split_tree({
+        "in_proj": pf.dense((d, 2 * di), ("embed", "mlp")),
+        "conv_w": pf.dense((cfg.ssm_conv, di), (None, "mlp"), scale=0.5),
+        "conv_b": pf.zeros((di,), ("mlp",)),
+        "x_proj": pf.dense((di, dt_rank + 2 * n), ("mlp", None)),
+        "dt_proj_w": pf.dense((dt_rank, di), (None, "mlp")),
+        "dt_proj_b": pf.const(jnp.full((di,), -4.6), ("mlp",)),  # softplus~0.01
+        "a_log": pf.const(
+            jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                     (di, n))), ("mlp", None)),
+        "d": pf.ones((di,), ("mlp",)),
+        "out_proj": pf.dense((di, d), ("mlp", "embed")),
+    })
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: [B, S, Di]; w: [K, Di] depthwise causal conv.
+    state: [B, K-1, Di] carry for decode."""
+    k = w.shape[0]
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype) \
+        if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, x.shape[1]:]      # last k-1 inputs
+    return out + b[None, None], new_state
+
+
+def mamba_layer(params, cfg: ModelConfig, x, *, backend: str = "reference",
+                state=None):
+    """x: [B, S, D].  state = (ssm_h [B, Di, N], conv [B, K-1, Di]) for
+    decode; None for train/prefill.  Returns (out, new_state)."""
+    p = params
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = p["dt_proj_w"].shape[0]
+
+    xz = x @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+    conv_state = None if state is None else state[1]
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj_w"]
+                         + p["dt_proj_b"][None, None])
+    bmat = proj[..., dt_rank:dt_rank + n]
+    cmat = proj[..., dt_rank + n:]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if state is None:
+        y = selective_scan(xi, dt, a, bmat, cmat, p["d"], backend=backend)
+        new_h = None
+    else:
+        h = state[0]
+        da = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * a[None])
+        h = da * h + (dt[:, 0] * xi[:, 0])[..., None] \
+            * bmat[:, 0, None, :].astype(jnp.float32)
+        y = (jnp.sum(h * cmat[:, 0, None, :].astype(jnp.float32), axis=-1)
+             + p["d"] * xi[:, 0])[:, None].astype(x.dtype)
+        new_h = h
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, (new_h, new_conv)

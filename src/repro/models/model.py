@@ -1,0 +1,492 @@
+"""Unified model: init / forward / loss / decode for all 10 assigned archs.
+
+Compile-efficiency rule: layers are SCANNED, never unrolled.  Uniform archs
+(dense, moe, rwkv, vlm, whisper stacks) scan stacked [L, ...] params with a
+per-layer window array (gemma3's 5:1 local:global schedule is just data).
+Jamba scans 4 super-blocks whose body unrolls the 8-layer pattern
+(7 mamba + 1 attn, MoE every 2nd ffn).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import (ParamFactory, ffn, init_ffn, init_norm,
+                                 norm, split_tree)
+
+
+# ------------------------------------------------------------------- init
+
+def _stack_init(pf: ParamFactory, n: int, fn):
+    """vmap-init n copies of a layer; prepend 'layers' to every spec."""
+    keys = jax.random.split(pf.split(), n)
+
+    def one(k):
+        sub = ParamFactory(k, pf.dtype)
+        params, specs = fn(sub)
+        return params
+
+    params = jax.vmap(one)(keys)
+    _, specs = fn(ParamFactory(jax.random.PRNGKey(0), pf.dtype))
+    specs = jax.tree.map(lambda s: ("layers", *s), specs,
+                         is_leaf=lambda s: isinstance(s, tuple) and all(
+                             isinstance(e, (str, type(None))) for e in s))
+    return params, specs
+
+
+def _init_block(pf: ParamFactory, cfg: ModelConfig, kind: str, use_moe: bool):
+    """One transformer block: mixer (attn/mamba/rwkv) + ffn + norms."""
+    def build(sub: ParamFactory):
+        tree = {}
+        if kind == "attn":
+            p, s = attn_mod.init_attention(sub, cfg)
+            tree["mixer"] = (p, s)
+        elif kind == "mamba":
+            p, s = mamba_mod.init_mamba_layer(sub, cfg)
+            tree["mixer"] = (p, s)
+        elif kind == "rwkv":
+            p, s = rwkv_mod.init_rwkv_layer(sub, cfg)
+            tree["mixer"] = (p, s)
+        if use_moe:
+            p, s = moe_mod.init_moe(sub, cfg)
+            tree["ffn"] = (p, s)
+        elif kind != "rwkv":          # rwkv's channel-mix IS its ffn
+            p, s = init_ffn(sub, cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+            tree["ffn"] = (p, s)
+        n1 = init_norm(sub, cfg.d_model, cfg.norm_kind)
+        n2 = init_norm(sub, cfg.d_model, cfg.norm_kind)
+        tree["ln1"] = n1
+        tree["ln2"] = n2
+        out = {}
+        for k, v in tree.items():
+            out[k] = v
+        return _merge(out)
+
+    return build
+
+
+def _merge(tree):
+    params = {k: v[0] for k, v in tree.items()}
+    specs = {k: v[1] for k, v in tree.items()}
+    return params, specs
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array, dtype=jnp.float32):
+    pf = ParamFactory(rng, dtype)
+    tree: dict = {}
+    tree["embed"] = pf.embed((cfg.vocab, cfg.d_model), ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = pf.dense((cfg.d_model, cfg.vocab),
+                                   ("embed", "vocab"))
+    fn_p, fn_s = init_norm(pf, cfg.d_model, cfg.norm_kind)
+    tree["final_norm"] = (fn_p, fn_s)
+
+    if cfg.family == "hybrid":
+        period = len(cfg.pattern)          # jamba: 8
+        n_blocks = cfg.n_layers // period
+
+        def one_superblock(sub: ParamFactory):
+            out = {}
+            for i, kind in enumerate(cfg.pattern):
+                use_moe = cfg.moe and (i % cfg.moe_every == cfg.moe_every - 1)
+                p, s = _init_block(sub, cfg, kind, use_moe)(sub)
+                out[f"pos{i}"] = (p, s)
+            return _merge(out)
+
+        tree["blocks"] = _stack_init(pf, n_blocks, one_superblock)
+    elif cfg.family == "audio":
+        enc_cfg = cfg
+        tree["enc_blocks"] = _stack_init(
+            pf, cfg.enc_layers, _init_block(pf, cfg, "attn", False))
+        def dec_block(sub: ParamFactory):
+            p, s = _init_block(sub, cfg, "attn", False)(sub)
+            cp, cs = attn_mod.init_cross_attention(sub, cfg)
+            np_, ns = init_norm(sub, cfg.d_model, cfg.norm_kind)
+            p["cross"], s["cross"] = cp, cs
+            p["ln_cross"], s["ln_cross"] = np_, ns
+            return p, s
+        tree["blocks"] = _stack_init(pf, cfg.n_layers, dec_block)
+        ep, es = init_norm(pf, cfg.d_model, cfg.norm_kind)
+        tree["enc_final_norm"] = (ep, es)
+    else:
+        kind = {"ssm": "rwkv"}.get(cfg.family, "attn")
+        use_moe = cfg.moe and cfg.moe_every == 1
+        tree["blocks"] = _stack_init(pf, cfg.n_layers,
+                                     _init_block(pf, cfg, kind, use_moe))
+    return _merge(tree)
+
+
+# ---------------------------------------------------------------- forward
+
+def _block_apply(cfg: ModelConfig, p, x, positions, window, kind: str,
+                 use_moe: bool, backend: str):
+    h = norm(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+    if kind == "attn":
+        mix = attn_mod.attention(p["mixer"], cfg, h, positions, window,
+                                 backend=backend)
+    elif kind == "mamba":
+        mix, _ = mamba_mod.mamba_layer(p["mixer"], cfg, h, backend=backend)
+    else:  # rwkv time-mix
+        mix, _ = rwkv_mod.time_mix(p["mixer"]["time_mix"], cfg, h,
+                                   backend=backend)
+    x = x + mix
+    h = norm(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        out, _ = rwkv_mod.channel_mix(p["mixer"]["channel_mix"], h)
+    elif use_moe:
+        out, extras = moe_mod.moe_ffn(p["ffn"], cfg, h)
+        aux = extras["aux_loss"].astype(jnp.float32)
+    else:
+        out = ffn(p["ffn"], h, cfg.ffn_kind, cfg.act)
+    return x + out, aux
+
+
+def forward(cfg: ModelConfig, params, batch: dict, *,
+            backend: str = "reference", remat: bool = True):
+    """batch: tokens [B,S] (or embeds [B,S,D]), positions, enc_embeds...
+    Returns (logits [B,S,V], aux)."""
+    if cfg.family == "audio":
+        return _forward_encdec(cfg, params, batch, backend, remat)
+
+    if "embeds" in batch:
+        x = batch["embeds"].astype(params["embed"].dtype)
+    else:
+        x = params["embed"][batch["tokens"]]
+    x = constrain(x, ("batch", "seq", "embed"))
+    b, s = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    windows = jnp.asarray(cfg.layer_windows, jnp.int32)
+
+    if cfg.family == "hybrid":
+        period = len(cfg.pattern)
+
+        def body(x, blk):
+            aux = 0.0
+            for i, kind in enumerate(cfg.pattern):
+                use_moe = cfg.moe and (i % cfg.moe_every == cfg.moe_every - 1)
+                x, a = _block_apply(cfg, blk[f"pos{i}"], x, positions,
+                                    jnp.int32(-1), kind, use_moe, backend)
+                aux = aux + a
+            return x, aux
+    else:
+        kind = {"ssm": "rwkv"}.get(cfg.family, "attn")
+        use_moe = cfg.moe and cfg.moe_every == 1
+
+        def body(x, inputs):
+            blk, window = inputs
+            x, aux = _block_apply(cfg, blk, x, positions, window, kind,
+                                  use_moe, backend)
+            return x, aux
+
+    if cfg.family == "hybrid":
+        xs = params["blocks"]
+    elif cfg.banded_local and len(set(cfg.window_pattern)) > 1:
+        return _forward_banded(cfg, params, x, positions, backend, remat)
+    else:
+        xs = (params["blocks"], windows)
+    scan_body = jax.checkpoint(body) if remat else body
+    x, auxs = jax.lax.scan(scan_body, x, xs)
+    x = norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    logits = _lm_logits(cfg, params, x)
+    return logits, jnp.sum(auxs)
+
+
+def _forward_banded(cfg, params, x, positions, backend, remat):
+    """§Perf hillclimb B: superblock scan with STATIC per-position windows
+    so local layers use banded attention (S x 2w instead of S x S).
+    Layers = n_full superblocks of len(window_pattern) + unrolled tail."""
+    period = len(cfg.window_pattern)
+    n_full = cfg.n_layers // period
+    tail = cfg.n_layers - n_full * period
+    use_moe = cfg.moe and cfg.moe_every == 1
+
+    def one_layer(blk, x, w):
+        h = norm(blk["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+        if w > 0:
+            mix = attn_mod.banded_attention(blk["mixer"], cfg, h, positions,
+                                            w)
+        else:
+            mix = attn_mod.attention(blk["mixer"], cfg, h, positions,
+                                     jnp.int32(-1), backend=backend)
+        x = x + mix
+        h = norm(blk["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+        if use_moe:
+            out, extras = moe_mod.moe_ffn(blk["ffn"], cfg, h)
+            return x + out, extras["aux_loss"].astype(jnp.float32)
+        return x + ffn(blk["ffn"], h, cfg.ffn_kind, cfg.act), \
+            jnp.zeros((), jnp.float32)
+
+    main = jax.tree.map(
+        lambda a: a[:n_full * period].reshape(n_full, period, *a.shape[1:]),
+        params["blocks"])
+    tail_blocks = jax.tree.map(lambda a: a[n_full * period:],
+                               params["blocks"])
+
+    def super_body(x, blk):
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(period):
+            sub = jax.tree.map(lambda a: a[i], blk)
+            x, a = one_layer(sub, x, cfg.window_pattern[i])
+            aux = aux + a
+        return x, aux
+
+    sb = jax.checkpoint(super_body) if remat else super_body
+    x, auxs = jax.lax.scan(sb, x, main)
+    aux_total = jnp.sum(auxs)
+    for i in range(tail):
+        sub = jax.tree.map(lambda a: a[i], tail_blocks)
+        x, a = one_layer(sub, x, cfg.window_pattern[i % period])
+        aux_total = aux_total + a
+    x = norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return _lm_logits(cfg, params, x), aux_total
+
+
+def _lm_logits(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def _forward_encdec(cfg, params, batch, backend, remat):
+    """Whisper: encoder over precomputed frame embeddings (conv frontend is
+    a stub per the assignment), causal decoder with cross-attention."""
+    enc = batch["enc_embeds"].astype(params["embed"].dtype)
+    b, se = enc.shape[:2]
+    enc_pos = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+
+    def enc_body(x, blk):
+        h = norm(blk["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+        mix = attn_mod.attention(blk["mixer"], cfg, h, enc_pos,
+                                 jnp.int32(-1), causal=False,
+                                 backend=backend)
+        x = x + mix
+        h = norm(blk["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+        return x + ffn(blk["ffn"], h, cfg.ffn_kind, cfg.act), 0.0
+
+    eb = jax.checkpoint(enc_body) if remat else enc_body
+    enc, _ = jax.lax.scan(eb, enc, params["enc_blocks"])
+    enc = norm(params["enc_final_norm"], enc, cfg.norm_kind, cfg.norm_eps)
+
+    x = params["embed"][batch["tokens"]]
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def dec_body(x, blk):
+        h = norm(blk["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + attn_mod.attention(blk["mixer"], cfg, h, pos, jnp.int32(-1),
+                                   backend=backend)
+        h = norm(blk["ln_cross"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + attn_mod.cross_attention(blk["cross"], cfg, h, enc)
+        h = norm(blk["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+        return x + ffn(blk["ffn"], h, cfg.ffn_kind, cfg.act), 0.0
+
+    db = jax.checkpoint(dec_body) if remat else dec_body
+    x, _ = jax.lax.scan(db, x, params["blocks"])
+    x = norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return _lm_logits(cfg, params, x), jnp.float32(0.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, backend: str = "reference",
+            remat: bool = True):
+    logits, aux = forward(cfg, params, batch, backend=backend, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll + 0.01 * aux
+
+
+# ----------------------------------------------------------------- decode
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Decode cache + logical specs, stacked [L, ...] for layer scans."""
+    hd = cfg.head_dim
+    if cfg.family == "ssm":
+        d = cfg.d_model
+        h = cfg.n_heads
+        cache = {
+            "wkv": jnp.zeros((cfg.n_layers, batch, h, d // h, d // h),
+                             jnp.float32),
+            "last_tm": jnp.zeros((cfg.n_layers, batch, d), dtype),
+            "last_cm": jnp.zeros((cfg.n_layers, batch, d), dtype),
+        }
+        specs = {
+            "wkv": ("layers", "batch", "heads", None, None),
+            "last_tm": ("layers", "batch", "embed"),
+            "last_cm": ("layers", "batch", "embed"),
+        }
+        return cache, specs
+    if cfg.family == "hybrid":
+        period = len(cfg.pattern)
+        nb = cfg.n_layers // period
+        n_attn = sum(1 for k in cfg.pattern if k == "attn")
+        n_mamba = period - n_attn
+        di = cfg.ssm_expand * cfg.d_model
+        cache = {
+            "k": jnp.zeros((nb, n_attn, batch, cfg.n_kv_heads, max_seq, hd),
+                           dtype),
+            "v": jnp.zeros((nb, n_attn, batch, cfg.n_kv_heads, max_seq, hd),
+                           dtype),
+            "ssm_h": jnp.zeros((nb, n_mamba, batch, di, cfg.ssm_state),
+                               jnp.float32),
+            "conv": jnp.zeros((nb, n_mamba, batch, cfg.ssm_conv - 1, di),
+                              dtype),
+        }
+        specs = {
+            "k": ("layers", None, "batch", "kv_heads", "cache_seq",
+                  "cache_head_dim"),
+            "v": ("layers", None, "batch", "kv_heads", "cache_seq",
+                  "cache_head_dim"),
+            "ssm_h": ("layers", None, "batch", "mlp", None),
+            "conv": ("layers", None, "batch", None, "mlp"),
+        }
+        return cache, specs
+    # dense / moe / vlm / audio-decoder
+    cache = {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_seq, hd),
+                       dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_seq, hd),
+                       dtype),
+    }
+    specs = {
+        "k": ("layers", "batch", "kv_heads", "cache_seq", "cache_head_dim"),
+        "v": ("layers", "batch", "kv_heads", "cache_seq", "cache_head_dim"),
+    }
+    if cfg.family == "audio":
+        cache["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.n_kv_heads, cfg.enc_seq, hd), dtype)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        specs["cross_k"] = ("layers", "batch", "kv_heads", None,
+                            "cache_head_dim")
+        specs["cross_v"] = specs["cross_k"]
+    return cache, specs
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
+                backend: str = "reference"):
+    """One decode token: tokens [B] int32, pos [B] current lengths.
+    Returns (logits [B, V], cache')."""
+    if cfg.family == "ssm":
+        return _decode_rwkv(cfg, params, cache, tokens, pos)
+    if cfg.family == "hybrid":
+        return _decode_hybrid(cfg, params, cache, tokens, pos, backend)
+    return _decode_dense(cfg, params, cache, tokens, pos)
+
+
+def _ffn_or_moe(cfg, p, h, use_moe):
+    if use_moe:
+        out, _ = moe_mod.moe_ffn(p["ffn"], cfg, h)
+        return out
+    return ffn(p["ffn"], h, cfg.ffn_kind, cfg.act)
+
+
+def _decode_dense(cfg, params, cache, tokens, pos):
+    x = params["embed"][tokens][:, None]          # [B, 1, D]
+    windows = jnp.asarray(cfg.layer_windows, jnp.int32)
+    use_moe = cfg.moe and cfg.moe_every == 1
+    is_audio = cfg.family == "audio"
+
+    def body(x, inputs):
+        if is_audio:
+            blk, ck, cv, xk, xv, window = inputs
+        else:
+            blk, ck, cv, window = inputs
+        h = norm(blk["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+        mix, ck, cv = attn_mod.decode_attention_dense(blk["mixer"], cfg, h,
+                                                      ck, cv, pos, window)
+        x = x + mix
+        if is_audio:
+            # cross-attention against the (precomputed) encoder K/V cache
+            h = norm(blk["ln_cross"], x, cfg.norm_kind, cfg.norm_eps)
+            x = x + attn_mod.cross_attention_cached(blk["cross"], cfg, h,
+                                                    xk, xv)
+        h = norm(blk["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + _ffn_or_moe(cfg, blk, h, use_moe)
+        return x, (ck, cv)
+
+    if is_audio:
+        xs = (params["blocks"], cache["k"], cache["v"], cache["cross_k"],
+              cache["cross_v"], windows)
+    else:
+        xs = (params["blocks"], cache["k"], cache["v"], windows)
+    x, (k_new, v_new) = jax.lax.scan(body, x, xs)
+    x = norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    logits = _lm_logits(cfg, params, x)[:, 0]
+    return logits, {**cache, "k": k_new, "v": v_new}
+
+
+def _decode_rwkv(cfg, params, cache, tokens, pos):
+    x = params["embed"][tokens][:, None]          # [B, 1, D]
+
+    def body(x, inputs):
+        blk, wkv_s, ltm, lcm = inputs
+        h = norm(blk["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+        mix, (wkv_s, ltm) = rwkv_mod.time_mix(blk["mixer"]["time_mix"], cfg,
+                                              h, state=wkv_s, last_x=ltm)
+        x = x + mix
+        h = norm(blk["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+        out, lcm = rwkv_mod.channel_mix(blk["mixer"]["channel_mix"], h,
+                                        last_x=lcm)
+        return x + out, (wkv_s, ltm, lcm)
+
+    x, (wkv_new, ltm_new, lcm_new) = jax.lax.scan(
+        body, x, (params["blocks"], cache["wkv"], cache["last_tm"],
+                  cache["last_cm"]))
+    x = norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    logits = _lm_logits(cfg, params, x)[:, 0]
+    return logits, {"wkv": wkv_new, "last_tm": ltm_new, "last_cm": lcm_new}
+
+
+def _decode_hybrid(cfg, params, cache, tokens, pos, backend):
+    x = params["embed"][tokens][:, None]
+    period = len(cfg.pattern)
+
+    def body(x, inputs):
+        blk, ck, cv, hssm, conv = inputs
+        ai = mi = 0
+        new_k, new_v, new_h, new_c = [], [], [], []
+        for i, kind in enumerate(cfg.pattern):
+            p = blk[f"pos{i}"]
+            use_moe = cfg.moe and (i % cfg.moe_every == cfg.moe_every - 1)
+            h = norm(p["ln1"], x, cfg.norm_kind, cfg.norm_eps)
+            if kind == "attn":
+                # dense-cache layout [B, Hkv, S, hd]
+                mix, k2, v2 = attn_mod.decode_attention_dense(
+                    p["mixer"], cfg, h, ck[ai], cv[ai], pos, jnp.int32(-1))
+                new_k.append(k2)
+                new_v.append(v2)
+                ai += 1
+            else:
+                mix, (h2, c2) = mamba_mod.mamba_layer(
+                    p["mixer"], cfg, h, state=(hssm[mi], conv[mi]))
+                new_h.append(h2)
+                new_c.append(c2)
+                mi += 1
+            x = x + mix
+            h = norm(p["ln2"], x, cfg.norm_kind, cfg.norm_eps)
+            x = x + _ffn_or_moe(cfg, p, h, use_moe)
+        return x, (jnp.stack(new_k), jnp.stack(new_v), jnp.stack(new_h),
+                   jnp.stack(new_c))
+
+    x, (k2, v2, h2, c2) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["ssm_h"],
+                  cache["conv"]))
+    x = norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    logits = _lm_logits(cfg, params, x)[:, 0]
+    return logits, {"k": k2, "v": v2, "ssm_h": h2, "conv": c2}

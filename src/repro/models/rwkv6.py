@@ -1,0 +1,110 @@
+"""RWKV-6 "Finch" block: token-shift time-mix with data-dependent decay +
+channel-mix (arXiv:2404.05892).  Attention-free; O(1) state per layer.
+
+Faithful structure: per-channel lerp token shift with LoRA-produced mix
+coefficients, r/k/v/gate projections, data-dependent decay w_t =
+exp(-exp(w0 + lora(x))), per-head WKV recurrence (kernels/rwkv6_scan),
+group-norm on heads, squared-ReLU channel mix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.rwkv6_scan.ops import wkv
+from repro.models.common import ParamFactory, group_norm, split_tree
+
+LORA_R = 64
+
+
+def init_rwkv_layer(pf: ParamFactory, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    return split_tree({
+        "time_mix": {
+            # token-shift base mix per stream (r, k, v, w, g)
+            "mix_base": pf.zeros((5, d), ("stack", "embed")),
+            "mix_lora_a": pf.dense((d, 5 * 32), ("embed", None), scale=0.01),
+            "mix_lora_b": pf.dense((5 * 32, 5 * d), (None, None), scale=0.01),
+            "wr": pf.dense((d, d), ("embed", "heads")),
+            "wk": pf.dense((d, d), ("embed", "heads")),
+            "wv": pf.dense((d, d), ("embed", "heads")),
+            "wg": pf.dense((d, d), ("embed", "heads")),
+            "wo": pf.dense((d, d), ("heads", "embed")),
+            "w0": pf.const(jnp.full((d,), -4.0), ("embed",)),
+            "w_lora_a": pf.dense((d, LORA_R), ("embed", None), scale=0.01),
+            "w_lora_b": pf.dense((LORA_R, d), (None, "embed"), scale=0.01),
+            "u": pf.zeros((h, hd), ("heads", "head_dim")),
+            "ln_w": pf.ones((d,), ("embed",)),
+            "ln_b": pf.zeros((d,), ("embed",)),
+        },
+        "channel_mix": {
+            "mix_k": pf.zeros((d,), ("embed",)),
+            "wk": pf.dense((d, int(3.5 * d) // 32 * 32), ("embed", "mlp")),
+            "wv": pf.dense((int(3.5 * d) // 32 * 32, d), ("mlp", "embed")),
+            "wr": pf.dense((d, d), ("embed", "embed")),
+        },
+    })
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` carry at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def time_mix(params, cfg: ModelConfig, x, *, backend: str = "reference",
+             state=None, last_x=None):
+    """x: [B, S, D].  Returns (out, (new_state, new_last_x)) where state is
+    the [B, H, hd, hd] WKV state for decode continuation."""
+    p = params
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    xs = _shift(x, last_x)
+    dx = xs - x
+    # data-dependent per-stream mix (5 streams: r k v w g)
+    lora = jnp.tanh(x @ p["mix_lora_a"]) @ p["mix_lora_b"]
+    lora = lora.reshape(b, s, 5, d)
+    mix = jax.nn.sigmoid(p["mix_base"][None, None] + lora)
+    xr, xk, xv, xw, xg = [x + dx * mix[:, :, i] for i in range(5)]
+
+    r = (xr @ p["wr"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = p["w0"][None, None] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(logw.astype(jnp.float32)))
+    w = w.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    if state is None:
+        o = wkv(r, k, v, w, p["u"], backend=backend)   # [B, H, S, hd]
+        new_state = None
+    else:
+        o, new_state = _wkv_step(r, k, v, w, p["u"], state)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    o = group_norm(o, p["ln_w"], p["ln_b"], groups=h, eps=64e-5)
+    out = (o * g) @ p["wo"]
+    return out, (new_state, x[:, -1])
+
+
+def _wkv_step(r, k, v, w, u, state):
+    """Single-token recurrence for decode: state [B, H, hd, hd]."""
+    rt = r[:, :, 0].astype(jnp.float32)
+    kt = k[:, :, 0].astype(jnp.float32)
+    vt = v[:, :, 0].astype(jnp.float32)
+    wt = w[:, :, 0].astype(jnp.float32)
+    kv = kt[..., :, None] * vt[..., None, :]             # [B,H,hd,hd]
+    o = jnp.einsum("bhij,bhi->bhj", state + u[None, :, :, None] * kv, rt)
+    new_state = wt[..., :, None] * state + kv
+    return o[:, :, None].astype(r.dtype), new_state
+
+
+def channel_mix(params, x, last_x=None):
+    p = params
+    xs = _shift(x, last_x)
+    xk = x + (xs - x) * jax.nn.sigmoid(p["mix_k"])[None, None]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(x @ p["wr"]) * (k @ p["wv"]), x[:, -1]

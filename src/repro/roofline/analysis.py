@@ -1,0 +1,189 @@
+"""Roofline terms per (arch x shape x mesh) from dry-run artifacts.
+
+Hardware constants (TPU v5e target):
+  peak bf16 compute   197 TFLOP/s per chip
+  HBM bandwidth       819 GB/s per chip
+  ICI link bandwidth  ~50 GB/s per link
+  DCN (pod axis)      ~25 GB/s per host (multi-pod collectives)
+
+Terms (per device; the dry-run HLO is the per-partition program):
+  compute_s    = hlo_flops / PEAK_FLOPS
+  memory_s     = hlo_bytes / HBM_BW
+  collective_s = collective_bytes / ICI_BW
+MODEL_FLOPS is the analytic useful-work count (6*N*D train / 2*N*D
+inference, MoE uses active params) -- the MODEL_FLOPS / (hlo_flops *
+n_chips) ratio exposes remat and redundant compute.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+
+# ------------------------------------------------- analytic model flops
+
+def _layer_params(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    attn = d * h * hd + 2 * d * hkv * hd + h * hd * d
+    ffn_dense = (3 if cfg.ffn_kind == "swiglu" else 2) * d * cfg.d_ff
+    e = cfg.n_experts_padded or cfg.n_experts
+    moe_active = cfg.top_k * 3 * d * cfg.d_ff + d * e if cfg.moe else 0
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dtr = max(d // 16, 8)
+    mamba = (2 * d * di + cfg.ssm_conv * di + di * (dtr + 2 * n)
+             + dtr * di + di * d)
+    rwkv = 5 * d * d + d * d + 2 * (d * 5 * 32 + 5 * 32 * d) \
+        + (d * 64 + 64 * d) + 2 * int(3.5 * d) // 32 * 32 * d + d * d
+    return {"attn": attn, "ffn": ffn_dense, "moe": moe_active,
+            "mamba": mamba, "rwkv": rwkv}
+
+
+def active_params_per_token(cfg, kind: str = "train") -> float:
+    """Active (per-token) parameter count, excluding embeddings but
+    including the logits head matmul.  For audio decode the encoder and the
+    cross K/V projections are cached, not recomputed."""
+    p = _layer_params(cfg)
+    total = 0.0
+    for li, lk in enumerate(cfg.layer_types):
+        if lk == "attn":
+            total += p["attn"]
+        elif lk == "mamba":
+            total += p["mamba"]
+        else:
+            total += p["rwkv"]
+        if lk != "rwkv":
+            use_moe = cfg.moe and (li % cfg.moe_every == cfg.moe_every - 1)
+            total += p["moe"] if use_moe else p["ffn"]
+    if cfg.family == "audio":
+        if kind != "decode":
+            total += cfg.enc_layers * (p["attn"] + p["ffn"])  # encoder
+            total += cfg.n_layers * p["attn"]                 # cross qkvo
+        else:
+            total += cfg.n_layers * p["attn"] / 2             # cross q+o
+    total += cfg.d_model * cfg.vocab                          # logits head
+    return total
+
+
+def attention_flops(cfg, batch: int, seq: int, kind: str) -> float:
+    """Quadratic attention term, fwd: two matmuls (QK^T, PV) of
+    2*S*ctx*H*hd each; causal avg ctx = S/2; window avg ctx ~ w.
+    decode: one token against ctx keys."""
+    h, hd = cfg.n_heads, cfg.head_dim
+    total = 0.0
+    for li, lk in enumerate(cfg.layer_types):
+        if lk != "attn":
+            continue
+        w = cfg.layer_windows[li]
+        if kind == "decode":
+            ctx = min(seq, w) if w > 0 else seq
+            total += 4 * ctx * h * hd * batch
+        else:
+            ctx = min(seq, w) if w > 0 else seq / 2
+            total += 4 * seq * ctx * h * hd * batch
+    if cfg.family == "audio":
+        total += cfg.enc_layers * 4 * cfg.enc_seq ** 2 * h * hd * batch / 2
+        s_dec = 1 if kind == "decode" else seq
+        total += cfg.n_layers * 4 * s_dec * cfg.enc_seq * h * hd * batch
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-work FLOPs of one step of this cell (whole cluster)."""
+    n_act = active_params_per_token(cfg, shape.kind)
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * toks \
+            + 3.0 * attention_flops(cfg, shape.global_batch, shape.seq_len,
+                                    "train")
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * toks \
+            + attention_flops(cfg, shape.global_batch, shape.seq_len,
+                              "prefill")
+    toks = shape.global_batch
+    return 2.0 * n_act * toks \
+        + attention_flops(cfg, shape.global_batch, shape.seq_len, "decode")
+
+
+# ----------------------------------------------------------- the table
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    flops_ratio: float
+    mem_gb: float
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s * 1e3:.2f} | {self.memory_s * 1e3:.2f} | "
+                f"{self.collective_s * 1e3:.2f} | {self.dominant} | "
+                f"{self.flops_ratio:.2f} | {self.mem_gb:.2f} |")
+
+
+def from_record(rec: dict, cfg, shape) -> Roofline:
+    hc = rec.get("hlo_cost") or {}
+    flops = hc.get("flops", rec["cost_analysis"].get("flops", 0.0))
+    bytes_ = hc.get("bytes", rec["cost_analysis"].get("bytes accessed", 0.0))
+    coll = hc.get("collective_bytes", 0.0)
+    n = rec.get("devices", 256)
+    mf = model_flops(cfg, shape)
+    c_s = flops / PEAK_FLOPS
+    m_s = bytes_ / HBM_BW
+    k_s = coll / ICI_BW
+    dom = max((c_s, "compute"), (m_s, "memory"), (k_s, "collective"))[1]
+    ma = rec.get("memory_analysis") or {}
+    mem = (ma.get("argument_size_in_bytes", 0)
+           + ma.get("output_size_in_bytes", 0)
+           + ma.get("temp_size_in_bytes", 0)
+           - ma.get("alias_size_in_bytes", 0))
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        devices=n, compute_s=c_s, memory_s=m_s, collective_s=k_s,
+        dominant=dom, hlo_flops=flops, hlo_bytes=bytes_, coll_bytes=coll,
+        model_flops=mf, flops_ratio=mf / max(flops * n, 1.0),
+        mem_gb=mem / 1e9)
+
+
+def load_all(artdir: str, mesh: str = "single") -> list:
+    from repro.configs.base import SHAPES, get_arch
+    out = []
+    for fn in sorted(os.listdir(artdir)):
+        if not fn.endswith(f"_{mesh}.json"):
+            continue
+        rec = json.load(open(os.path.join(artdir, fn)))
+        if not rec.get("ok"):
+            continue
+        cfg = get_arch(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        out.append(from_record(rec, cfg, shape))
+    return out
+
+
+HEADER = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+          "collective (ms) | bound | MODEL/HLO flops | mem GB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|")

@@ -1,0 +1,209 @@
+"""Serving engine: continuous batching over the PrismDB tiered KV cache.
+
+The paper's full data path, live:
+  * every decode step selects top-k pages per sequence from Quest summaries
+    (the access stream feeds the clock tracker -> mapper histogram);
+  * pages resident in the HBM pool are gathered directly; pages that went
+    cold and were demoted are read from the host pool (charged slow reads,
+    the paper's "reads served from flash");
+  * MSC compactions (write-triggered at the pool watermark; read-triggered
+    by the §5.3 policy) demote cold pages into host runs and promote
+    re-heated ones back.
+
+One page pool serves all attention layers (pages are [L, ...] stacked).
+Works with uniform-attention archs (dense / moe / vlm families).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import paged_kv, policy, tiers
+from repro.core.paged_kv import PagedKVConfig, PagedKVState
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.common import ffn, norm
+
+
+# ------------------------------------------------------------ model step
+
+def paged_decode_step(mcfg: ModelConfig, cfg: PagedKVConfig, params,
+                      kv: PagedKVState, tokens, seq_ids, pos, valid):
+    """One decode token through the tiered paged KV cache.
+
+    tokens/seq_ids/pos/valid: [B].  Returns (logits [B, V], kv')."""
+    x = params["embed"][tokens][:, None]                  # [B, 1, D]
+    b = tokens.shape[0]
+    hd = mcfg.head_dim
+    hkv = mcfg.n_kv_heads
+    g = mcfg.n_heads // hkv
+
+    # ---- page selection shared across layers (summaries summed over L)
+    q_proxy = jnp.broadcast_to(
+        x.reshape(1, b, 1, -1)[..., :hd].astype(jnp.float32),
+        (cfg.n_layers, b, cfg.kv_heads, hd))
+    pidx, pmask = paged_kv.select_pages(kv, cfg, seq_ids, q_proxy)
+    kv, kk, vv, tok_ok = paged_kv.gather_pages(kv, cfg, seq_ids, pidx, pmask)
+    # kk/vv: [L, B, K*T, Hkv, hd]
+
+    use_moe = mcfg.moe and mcfg.moe_every == 1
+
+    def body(x, inputs):
+        blk, k_l, v_l = inputs                            # [B, K*T, Hkv, hd]
+        h = norm(blk["ln1"], x, mcfg.norm_kind, mcfg.norm_eps)
+        q, k_new, v_new = attn_mod._qkv(blk["mixer"], mcfg, h, pos[:, None])
+        kcat = jnp.concatenate(
+            [jnp.transpose(k_l, (0, 2, 1, 3)), k_new], axis=2)
+        vcat = jnp.concatenate(
+            [jnp.transpose(v_l, (0, 2, 1, 3)), v_new], axis=2)
+        ok = jnp.concatenate([tok_ok, jnp.ones((b, 1), bool)], axis=1)
+        qf = (q[:, :, 0].astype(jnp.float32) * hd ** -0.5) \
+            .reshape(b, hkv, g, hd)
+        s = jnp.einsum("bhgd,bhkd->bhgk", qf, kcat.astype(jnp.float32))
+        s = jnp.where(ok[:, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgk,bhkd->bhgd", p, vcat.astype(jnp.float32))
+        o = o.reshape(b, 1, mcfg.n_heads, hd).astype(x.dtype)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, blk["mixer"]["wo"])
+        h = norm(blk["ln2"], x, mcfg.norm_kind, mcfg.norm_eps)
+        if use_moe:
+            out, _ = moe_mod.moe_ffn(blk["ffn"], mcfg, h)
+        else:
+            out = ffn(blk["ffn"], h, mcfg.ffn_kind, mcfg.act)
+        # new token's kv: [B, Hkv, hd]
+        return x + out, (k_new[:, :, 0].transpose(0, 1, 2),
+                         v_new[:, :, 0])
+
+    x, (k_stack, v_stack) = jax.lax.scan(
+        body, x, (params["blocks"], kk, vv))
+    # k_stack: [L, B, Hkv, hd] -> append wants [L, B, H(kv), hd]
+    kv = paged_kv.append_tokens(kv, cfg, seq_ids, k_stack, v_stack, valid)
+
+    x = norm(params["final_norm"], x, mcfg.norm_kind, mcfg.norm_eps)
+    head = params["embed"].T if mcfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head)
+    return logits, kv
+
+
+# ----------------------------------------------------------------- engine
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = field(default_factory=list)
+    seq_slot: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    """Continuous batching + tiered-KV maintenance loop."""
+
+    def __init__(self, mcfg: ModelConfig, kv_cfg: PagedKVConfig, params,
+                 seed: int = 0, pol_cfg: policy.PolicyConfig | None = None):
+        self.mcfg = mcfg
+        self.cfg = kv_cfg
+        self.params = params
+        self.kv = paged_kv.init(kv_cfg)
+        self.rng = jax.random.PRNGKey(seed)
+        self.pol = policy.init()
+        self.pol_cfg = pol_cfg or policy.PolicyConfig(
+            epoch_ops=512, cooldown_ops=2048, read_heavy_frac=0.05,
+            slow_tracked_frac=0.05)
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}     # seq_slot -> request
+        self.free_slots = list(range(kv_cfg.max_seqs))
+        self._step = jax.jit(functools.partial(paged_decode_step, mcfg,
+                                               kv_cfg))
+        self._compact = jax.jit(
+            functools.partial(paged_kv.compact, cfg=kv_cfg))
+        self.stats = {"steps": 0, "compactions": 0, "retired": 0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------- admit
+    def _admit(self):
+        while self.queue and self.free_slots:
+            req = self.queue.pop(0)
+            slot = self.free_slots.pop(0)
+            req.seq_slot = slot
+            # reset the sequence slot
+            self.kv = self.kv._replace(
+                seq_len=self.kv.seq_len.at[slot].set(0))
+            self.active[slot] = req
+
+    # ----------------------------------------------------------- service
+    def _headroom(self, need: int, max_rounds: int = 64):
+        for _ in range(max_rounds):
+            if int(tiers.free_fast_slots(self.kv.tier)) >= need:
+                return
+            self.rng, sub = jax.random.split(self.rng)
+            self.kv, _ = self._compact(self.kv, rng=sub)
+            self.stats["compactions"] += 1
+
+    def _maybe_read_compact(self):
+        total = self.kv.tier.ctr.gets + self.kv.tier.ctr.puts
+        self.pol, go = policy.step(self.pol, self.kv.tier, self.pol_cfg,
+                                   total)
+        if bool(go) and int(self.pol.phase) == policy.ACTIVE:
+            self.rng, sub = jax.random.split(self.rng)
+            self.kv, _ = self._compact(self.kv, rng=sub)
+            self.stats["compactions"] += 1
+
+    def step(self):
+        """One engine tick: admit, maintain tiers, decode one token for
+        every active sequence (prompts feed token-by-token: prefill and
+        decode share the paged write path)."""
+        self._admit()
+        if not self.active:
+            return False
+        b = self.cfg.max_seqs
+        tokens = jnp.zeros((b,), jnp.int32)
+        seq_ids = jnp.arange(b, dtype=jnp.int32)
+        valid = jnp.zeros((b,), bool)
+        for slot, req in self.active.items():
+            n_out = int(self.kv.seq_len[slot])
+            tok = req.prompt[n_out] if n_out < len(req.prompt) else \
+                (req.out[-1] if req.out else 0)
+            tokens = tokens.at[slot].set(int(tok))
+            valid = valid.at[slot].set(True)
+        pos = self.kv.seq_len
+
+        self._headroom(need=len(self.active))
+        self._maybe_read_compact()
+        logits, self.kv = self._step(self.params, self.kv, tokens, seq_ids,
+                                     pos, valid)
+        self.stats["steps"] += 1
+
+        nxt = jnp.argmax(logits, axis=-1)
+        retired = []
+        for slot, req in self.active.items():
+            n = int(self.kv.seq_len[slot])
+            if n > len(req.prompt):                 # generating
+                req.out.append(int(nxt[slot]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                retired.append(slot)
+        for slot in retired:
+            # retired sequences' pages go cold; MSC demotes them later
+            self.active.pop(slot)
+            self.free_slots.append(slot)
+            self.stats["retired"] += 1
+        return True
+
+    def run(self, max_ticks: int = 10000):
+        t = 0
+        while (self.queue or self.active) and t < max_ticks:
+            self.step()
+            t += 1
+        return t
+
+    @property
+    def counters(self) -> dict:
+        return {k: int(v) for k, v in self.kv.tier.ctr._asdict().items()}

@@ -1,0 +1,113 @@
+"""Fault-tolerant checkpointing: atomic, async, mesh-elastic.
+
+  * atomic: write to <dir>/tmp.<step>, fsync, rename to <dir>/step_<step>
+    (a crash mid-save never corrupts the latest checkpoint);
+  * async: device->host transfer happens at save() call; serialization +
+    rename run on a background thread so the train loop keeps stepping;
+  * elastic: checkpoints store plain host arrays + the logical spec tree;
+    restore() re-shards onto WHATEVER mesh is current (scale up/down
+    between runs -- DESIGN.md fault-tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: Any, *, blocking: bool = False):
+        """Snapshot to host memory now; persist in the background."""
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._persist, args=(step, host), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _persist(self, step: int, host_state):
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        with open(os.path.join(tmp, "state.pkl"), "wb") as f:
+            pickle.dump(host_state, f)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)               # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            path = os.path.join(self.dir, f"step_{s:08d}")
+            for root, dirs, files in os.walk(path, topdown=False):
+                for fn in files:
+                    os.unlink(os.path.join(root, fn))
+                for d in dirs:
+                    os.rmdir(os.path.join(root, d))
+            os.rmdir(path)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, *, shardings=None) -> Any:
+        """Load a checkpoint; if `shardings` (a pytree of NamedSharding for
+        the CURRENT mesh) is given, place shards accordingly -- the elastic
+        path: the stored arrays are mesh-agnostic host arrays."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}", "state.pkl")
+        with open(path, "rb") as f:
+            host = pickle.load(f)
+        if shardings is None:
+            return jax.tree.map(jax.numpy.asarray, host)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), host, shardings)

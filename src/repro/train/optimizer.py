@@ -1,0 +1,101 @@
+"""AdamW with ZeRO-1 sharded optimizer state + gradient clipping.
+
+The m/v moments inherit the parameter's logical sharding and additionally
+shard their largest replicated dimension over the `data` axis (ZeRO-1):
+optimizer state is elementwise, so any extra partitioning is free, and on
+a 16x16 mesh it cuts per-device moment memory 16x for TP-replicated dims.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params) -> OptState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(z, params),
+                    v=jax.tree.map(z, params))
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply(cfg: AdamWConfig, params, grads, opt: OptState):
+    """Returns (new_params, new_opt, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = opt.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm,
+                                                 "lr": lr}
+
+
+def moment_specs(param_specs):
+    """ZeRO-1: moments take the param's logical spec with 'data' appended to
+    the first replicated (None-mapped) dimension via the `zero` logical
+    axis (rules map 'zero' -> 'data')."""
+    def one(spec):
+        out = list(spec)
+        # shard the first unmapped non-stack dimension over 'zero' (data)
+        if out and out[0] is None:
+            out[0] = "zero"
+        elif out and out[0] in ("layers", "stack") and len(out) > 1 \
+                and out[1] is None:
+            out[1] = "zero"
+        return tuple(out)
+    return jax.tree.map(one, param_specs,
+                        is_leaf=lambda s: isinstance(s, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in s))

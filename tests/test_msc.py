@@ -1,0 +1,96 @@
+"""MSC metric (Eq. 1): formula correctness, approx-vs-precise agreement,
+selection behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PrismDB, TierConfig, mapper, msc, tiers, tracker
+
+
+def test_msc_formula_hand_computed():
+    # benefit=10, t_n=20, t_f=40 -> F=2, o=0.5, p=0.2
+    # cost = 2*(2-0.5)/(1-0.2)+1 = 4.75 ; msc = 10/4.75
+    out = msc._msc(jnp.float32(10.0), jnp.float32(20.0), jnp.float32(40.0),
+                   jnp.float32(0.2), jnp.float32(0.5))
+    np.testing.assert_allclose(float(out), 10.0 / 4.75, rtol=1e-6)
+
+
+def test_msc_prefers_cold_low_fanout_ranges():
+    """Higher coldness -> higher score; higher fanout -> lower score."""
+    b, tn, tf = jnp.float32(10.0), jnp.float32(20.0), jnp.float32(40.0)
+    base = float(msc._msc(b, tn, tf, jnp.float32(0.2), jnp.float32(0.5)))
+    colder = float(msc._msc(b * 2, tn, tf, jnp.float32(0.2),
+                            jnp.float32(0.5)))
+    fanout = float(msc._msc(b, tn, tf * 4, jnp.float32(0.2),
+                            jnp.float32(0.5)))
+    overlap = float(msc._msc(b, tn, tf, jnp.float32(0.2), jnp.float32(0.9)))
+    assert colder > base            # more cold data = more benefit
+    assert fanout < base            # more slow I/O per byte = worse
+    assert overlap > base           # overlap cleans stale data cheaply
+
+
+def _filled_db():
+    cfg = TierConfig(key_space=1 << 13, fast_slots=256, slow_slots=1 << 12,
+                     value_width=1, max_runs=64, run_size=128,
+                     bloom_bits_per_run=1 << 12, tracker_slots=1 << 10,
+                     n_buckets=32, pin_threshold=0.1)
+    db = PrismDB(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        db.put(rng.integers(0, cfg.key_space, 120).astype(np.int32))
+    # make some keys hot
+    hot = rng.integers(0, 1024, 64).astype(np.int32)
+    for _ in range(3):
+        db.get(hot)
+    return db
+
+
+def test_precise_and_approx_agree_on_ranking():
+    db = _filled_db()
+    state, cfg = db.state, db.cfg
+    rng = jax.random.PRNGKey(7)
+    cand, s_approx, _ = msc.select_range(state, cfg, rng, precise=False)
+    _, s_precise, _ = msc.select_range(state, cfg, rng, precise=True)
+    sa, sp = np.asarray(s_approx), np.asarray(s_precise)
+    live = (sa > 0) | (sp > 0)
+    if live.sum() >= 3:
+        # rank correlation between the two scorings should be positive
+        ra = np.argsort(np.argsort(sa[live]))
+        rp = np.argsort(np.argsort(sp[live]))
+        corr = np.corrcoef(ra, rp)[0, 1]
+        assert corr > 0.3, (sa, sp)
+
+
+def test_candidates_cover_keyspace_via_ownership():
+    db = _filled_db()
+    state, cfg = db.state, db.cfg
+    # ownership ranges: first active run owns from 0; last owns to key_space
+    lo = np.asarray(state.run_lo)
+    act = np.asarray(state.run_active)
+    assert act.any()
+    # sample many candidate sets; union of windows should span [0, ks)
+    los, his = [], []
+    for i in range(30):
+        c = msc.candidate_ranges(state, cfg, jax.random.PRNGKey(i))
+        los += np.asarray(c.lo).tolist()
+        his += np.asarray(c.hi).tolist()
+    assert min(los) == 0
+    assert max(his) == cfg.key_space
+
+
+def test_bucket_stats_consistency():
+    """Incrementally-maintained bucket_fast must equal a recount."""
+    db = _filled_db()
+    state, cfg = db.state, db.cfg
+    fast_keys = np.asarray(state.fast_keys)
+    live = fast_keys[fast_keys >= 0]
+    width = cfg.key_space // cfg.n_buckets
+    expect = np.bincount(np.clip(live // width, 0, cfg.n_buckets - 1),
+                         minlength=cfg.n_buckets)
+    got = np.asarray(state.bucket_fast)
+    np.testing.assert_array_equal(got, expect)
+    slow_keys = np.asarray(state.slow_keys)
+    live_s = slow_keys[slow_keys >= 0]
+    expect_s = np.bincount(np.clip(live_s // width, 0, cfg.n_buckets - 1),
+                           minlength=cfg.n_buckets)
+    np.testing.assert_array_equal(np.asarray(state.bucket_slow), expect_s)

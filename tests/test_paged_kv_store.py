@@ -1,0 +1,106 @@
+"""Tiered paged KV cache: round trips across compactions, tail pinning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import paged_kv, tiers
+from repro.core.paged_kv import PagedKVConfig
+
+CFG = PagedKVConfig(n_layers=2, kv_heads=2, head_dim=8, page_tokens=4,
+                    fast_pages=32, slow_pages=256, max_seqs=4,
+                    max_pages_per_seq=64, topk_pages=8, recent_pages=1,
+                    dtype="float32")
+
+
+def _drive(n_tokens=96):
+    state = paged_kv.init(CFG)
+    rng = jax.random.PRNGKey(0)
+    b = 4
+    seq_ids = jnp.arange(b, dtype=jnp.int32)
+    append = jax.jit(lambda s, k, v: paged_kv.append_tokens(
+        s, CFG, seq_ids, k, v, jnp.ones(b, bool)))
+    compact = jax.jit(lambda s, r: paged_kv.compact(s, CFG, r))
+    log = {}
+    for t in range(n_tokens):
+        k = jnp.full((CFG.n_layers, b, CFG.kv_heads, CFG.head_dim), float(t))
+        k = k + seq_ids[None, :, None, None] * 1000.0
+        rounds = 0
+        while int(tiers.free_fast_slots(state.tier)) < b and rounds < 20:
+            rng, sub = jax.random.split(rng)
+            state, _ = compact(state, sub)
+            rounds += 1
+        state = append(state, k, k + 0.5)
+        for bb in range(b):
+            log[(bb, t)] = float(t) + bb * 1000.0
+    return state, log, rng
+
+
+def test_append_survives_compactions():
+    state, log, _ = _drive()
+    assert [int(x) for x in state.seq_len] == [96] * 4
+    assert int(state.tier.ctr.compactions) > 0
+
+
+def test_cross_tier_gather_correct():
+    state, log, _ = _drive()
+    b = 4
+    seq_ids = jnp.arange(b, dtype=jnp.int32)
+    q = jnp.ones((CFG.n_layers, b, 4, CFG.head_dim))
+    pidx, mask = paged_kv.select_pages(state, CFG, seq_ids, q)
+    state, kk, vv, tok_ok = paged_kv.gather_pages(state, CFG, seq_ids, pidx,
+                                                  mask)
+    assert float(tok_ok.mean()) == 1.0
+    pn, okn, kkn = np.asarray(pidx), np.asarray(tok_ok), np.asarray(kk)
+    for bb in range(b):
+        for j in range(pn.shape[1]):
+            for o in range(CFG.page_tokens):
+                col = j * CFG.page_tokens + o
+                if not okn[bb, col]:
+                    continue
+                tok = int(pn[bb, j]) * CFG.page_tokens + o
+                assert abs(float(kkn[0, bb, col, 0, 0])
+                           - log[(bb, tok)]) < 1e-5
+
+
+def test_gather_hits_slow_tier_and_counts_reads():
+    state, _, _ = _drive()
+    b = 4
+    seq_ids = jnp.arange(b, dtype=jnp.int32)
+    # select the OLDEST pages: mostly demoted by now
+    pidx = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None], (b, 1))
+    mask = jnp.ones((b, 8), bool)
+    before = int(state.tier.ctr.slow_reads)
+    state, kk, vv, tok_ok = paged_kv.gather_pages(state, CFG, seq_ids, pidx,
+                                                  mask)
+    assert float(tok_ok.mean()) == 1.0       # old pages still readable
+    assert int(state.tier.ctr.slow_reads) > before  # charged as slow reads
+
+
+def test_tail_pages_never_demoted():
+    state, _, rng = _drive()
+    tails = paged_kv.tail_page_keys(state, CFG)
+    for _ in range(5):
+        rng, sub = jax.random.split(rng)
+        state, _ = paged_kv.compact(state, CFG, sub)
+    from repro.core.utils import sorted_lookup
+    live_tails = np.asarray(tails[tails < 2**31 - 1])
+    _, found = sorted_lookup(state.tier.fidx_keys, state.tier.fidx_slots,
+                             jnp.asarray(live_tails, jnp.int32))
+    assert bool(jnp.all(found)), "a mutable tail page left the fast tier"
+
+
+def test_promotion_path():
+    """Re-heating demoted pages must promote them back on compaction."""
+    state, _, rng = _drive()
+    b = 4
+    seq_ids = jnp.arange(b, dtype=jnp.int32)
+    old = jnp.tile(jnp.arange(4, dtype=jnp.int32)[None], (b, 1))
+    mask = jnp.ones((b, 4), bool)
+    for _ in range(4):  # repeatedly read cold pages -> clock heats to 3
+        state, *_ = paged_kv.gather_pages(state, CFG, seq_ids, old, mask)
+    before = int(state.tier.ctr.promoted)
+    for _ in range(8):
+        rng, sub = jax.random.split(rng)
+        state, _ = paged_kv.compact(state, CFG, sub)
+    assert int(state.tier.ctr.promoted) > before, "no promotions happened"

@@ -1,0 +1,113 @@
+"""Serving engine: correctness vs dense-cache baseline + policy machine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.core import policy, tiers
+from repro.core.paged_kv import PagedKVConfig
+from repro.models import model as M
+from repro.serve.engine import Request, ServeEngine, paged_decode_step
+
+MCFG = reduced(get_arch("phi4-mini-3.8b"))
+
+
+def _kv_cfg(fast_pages=64, page_tokens=4, max_seqs=2, topk=32):
+    return PagedKVConfig(
+        n_layers=MCFG.n_layers, kv_heads=MCFG.n_kv_heads,
+        head_dim=MCFG.head_dim, page_tokens=page_tokens,
+        fast_pages=fast_pages, slow_pages=1024, max_seqs=max_seqs,
+        max_pages_per_seq=64, topk_pages=topk, recent_pages=2,
+        dtype="float32")
+
+
+def test_paged_decode_matches_dense_cache():
+    """With top-k covering ALL pages, the tiered paged decode must equal
+    the dense-cache decode path bit-for-bit(ish) -- even after pages have
+    been demoted to the slow pool."""
+    from repro.core import paged_kv
+    params, _ = M.init_params(MCFG, jax.random.PRNGKey(0))
+    kv_cfg = _kv_cfg(fast_pages=8, topk=32)    # tiny fast pool -> demotions
+    kv = paged_kv.init(kv_cfg)
+    cache, _ = M.init_cache(MCFG, 2, 64, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (40,), 1, MCFG.vocab)
+    seq_ids = jnp.arange(2, dtype=jnp.int32)
+    rng = jax.random.PRNGKey(2)
+    dense_step = jax.jit(lambda p, c, t, pos: M.decode_step(MCFG, p, c, t,
+                                                            pos))
+    paged_step = jax.jit(lambda p, kv, t, pos: paged_decode_step(
+        MCFG, kv_cfg, p, kv, t, seq_ids, pos, jnp.ones(2, bool)))
+    for t in range(40):
+        tt = jnp.full((2,), toks[t], jnp.int32)
+        pos = jnp.full((2,), t, jnp.int32)
+        dl, cache = dense_step(params, cache, tt, pos)
+        while int(tiers.free_fast_slots(kv.tier)) < 2:
+            rng, sub = jax.random.split(rng)
+            kv, _ = paged_kv.compact(kv, kv_cfg, sub)
+        pl, kv = paged_step(params, kv, tt, pos)
+        np.testing.assert_allclose(np.asarray(pl), np.asarray(dl),
+                                   atol=3e-3, rtol=1e-3,
+                                   err_msg=f"step {t}")
+    assert int(kv.tier.ctr.demoted) > 0         # tiering actually happened
+    assert int(kv.tier.ctr.hits_slow) > 0       # and slow reads occurred
+
+
+def test_engine_serves_all_requests():
+    params, _ = M.init_params(MCFG, jax.random.PRNGKey(0))
+    eng = ServeEngine(MCFG, _kv_cfg(fast_pages=48, max_seqs=4, topk=8),
+                      params)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=list(rng.integers(1, 400, 24)),
+                           max_new=12))
+    eng.run(max_ticks=400)
+    assert eng.stats["retired"] == 6
+    for r in [*eng.active.values()]:
+        assert False, "requests left active"
+
+
+def test_engine_under_memory_pressure_compacts():
+    params, _ = M.init_params(MCFG, jax.random.PRNGKey(0))
+    eng = ServeEngine(MCFG, _kv_cfg(fast_pages=16, max_seqs=4, topk=4),
+                      params)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=list(rng.integers(1, 400, 40)),
+                           max_new=8))
+    eng.run(max_ticks=400)
+    assert eng.stats["retired"] == 4
+    assert eng.stats["compactions"] > 0
+    c = eng.counters
+    assert c["demoted"] > 0
+
+
+def test_policy_state_machine():
+    cfg = policy.PolicyConfig(epoch_ops=10, cooldown_ops=20,
+                              min_improvement=0.01, read_heavy_frac=0.5,
+                              slow_tracked_frac=0.2)
+    pol = policy.init()
+    # fabricate a read-heavy tier state with slow-located tracked keys
+    from repro.core import TierConfig, tiers as tmod, tracker
+    tc = TierConfig(key_space=1024, fast_slots=64, slow_slots=256,
+                    value_width=1, max_runs=16, run_size=32,
+                    bloom_bits_per_run=1 << 10, tracker_slots=128,
+                    n_buckets=16)
+    st = tmod.init(tc)
+    keys = jnp.arange(50, dtype=jnp.int32)
+    trk = tracker.access_batched(st.tracker, keys,
+                                 jnp.ones(50, jnp.int8), jnp.ones(50, bool))
+    st = st._replace(tracker=trk,
+                     ctr=st.ctr._replace(gets=jnp.int32(100),
+                                         puts=jnp.int32(1),
+                                         hits_fast=jnp.int32(10)))
+    pol, go = policy.step(pol, st, cfg, jnp.int32(101))
+    assert int(pol.phase) == policy.ACTIVE and bool(go)
+    # epoch ends with no improvement -> cooldown
+    st2 = st._replace(ctr=st.ctr._replace(gets=jnp.int32(120),
+                                          hits_fast=jnp.int32(11)))
+    pol, go = policy.step(pol, st2, cfg, jnp.int32(120))
+    assert int(pol.phase) == policy.COOLDOWN
+    # cooldown expires -> detect
+    pol, go = policy.step(pol, st2, cfg, jnp.int32(150))
+    assert int(pol.phase) in (policy.DETECT, policy.ACTIVE)

@@ -1,0 +1,127 @@
+"""Tracker (clock) + mapper (pinning threshold) unit & property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mapper, tracker
+
+
+def test_insert_then_reaccess_sets_clock3():
+    st_ = tracker.init(64)
+    keys = jnp.array([5, 9], jnp.int32)
+    locs = jnp.zeros(2, jnp.int8)
+    ok = jnp.ones(2, bool)
+    st_ = tracker.access_batched(st_, keys, locs, ok)
+    clock, tracked = tracker.lookup_clock(st_, keys)
+    assert bool(jnp.all(tracked))
+    assert [int(c) for c in clock] == [0, 0]        # fresh insert -> 0
+    st_ = tracker.access_batched(st_, keys, locs, ok)
+    clock, _ = tracker.lookup_clock(st_, keys)
+    assert [int(c) for c in clock] == [3, 3]        # re-access -> 3
+
+
+def test_duplicate_in_batch_counts_as_reaccess():
+    st_ = tracker.init(64)
+    # pick two keys that do NOT collide in the 64-slot table
+    a, b = 7, None
+    sa = int(tracker._slot(st_, jnp.array([a], jnp.int32))[0])
+    for cand in range(8, 200):
+        if int(tracker._slot(st_, jnp.array([cand], jnp.int32))[0]) != sa:
+            b = cand
+            break
+    keys = jnp.array([a, a, b], jnp.int32)
+    st_ = tracker.access_batched(st_, keys, jnp.zeros(3, jnp.int8),
+                                 jnp.ones(3, bool))
+    clock, tracked = tracker.lookup_clock(st_, jnp.array([a, b], jnp.int32))
+    assert bool(jnp.all(tracked))
+    assert int(clock[0]) == 3 and int(clock[1]) == 0
+
+
+def test_clock_protection_decays_before_eviction():
+    st_ = tracker.init(4)                    # tiny: force collisions
+    a = jnp.array([1], jnp.int32)
+    one = jnp.ones(1, bool)
+    z = jnp.zeros(1, jnp.int8)
+    st_ = tracker.access_batched(st_, a, z, one)
+    st_ = tracker.access_batched(st_, a, z, one)   # clock 3
+    # find a colliding key
+    slot_a = int(tracker._slot(st_, a)[0])
+    b = None
+    for cand in range(2, 1000):
+        if int(tracker._slot(st_, jnp.array([cand], jnp.int32))[0]) == slot_a:
+            b = jnp.array([cand], jnp.int32)
+            break
+    assert b is not None
+    for i in range(3):                        # three collisions: decay 3->0
+        st_ = tracker.access_batched(st_, b, z, one)
+        clock, tracked = tracker.lookup_clock(st_, a)
+        assert bool(tracked[0]) and int(clock[0]) == 2 - i
+    st_ = tracker.access_batched(st_, b, z, one)   # clock 0 -> evict
+    _, tracked = tracker.lookup_clock(st_, a)
+    assert not bool(tracked[0])
+    _, tracked_b = tracker.lookup_clock(st_, b)
+    assert bool(tracked_b[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 499), min_size=1, max_size=64),
+       st.integers(0, 3))
+def test_batched_matches_seq_when_no_slot_collisions(keys, seed):
+    """On batches whose keys map to distinct slots, the vectorized update
+    must equal the exact ordered scan."""
+    cap = 2048
+    st0 = tracker.init(cap)
+    karr = jnp.asarray(keys, jnp.int32)
+    slots = np.asarray(tracker._slot(st0, karr))
+    uniq_keys = {}
+    for k, s in zip(keys, slots):
+        uniq_keys.setdefault(s, k)
+    filt = [v for v in uniq_keys.values()]
+    karr = jnp.asarray(filt, jnp.int32)
+    locs = jnp.zeros(len(filt), jnp.int8)
+    ok = jnp.ones(len(filt), bool)
+    a = tracker.access_batched(st0, karr, locs, ok)
+    b = tracker.access_seq(st0, karr, locs, ok)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=4, max_size=4),
+       st.floats(0.0, 1.0))
+def test_mapper_budget_satisfied(hist, thresh):
+    h = jnp.asarray(hist, jnp.int32)
+    probs = mapper.pin_probabilities(h, jnp.float32(thresh))
+    assert bool(jnp.all((probs >= 0) & (probs <= 1)))
+    frac = mapper.expected_pinned_fraction(h, probs)
+    total = sum(hist)
+    if total > 0:
+        np.testing.assert_allclose(float(frac), min(thresh, 1.0), atol=1e-5)
+    # monotone: hotter classes pin with >= probability
+    p = np.asarray(probs)
+    nonempty = np.asarray(hist) > 0
+    vals = p[nonempty]
+    assert all(vals[i] <= vals[i + 1] + 1e-6 for i in range(len(vals) - 1))
+
+
+def test_mapper_example_from_paper():
+    """Paper §4.3: dist 10/10/30/50 (c3..c0), threshold 15% -> pin all c3,
+    half of c2, none below."""
+    hist = jnp.asarray([50, 30, 10, 10], jnp.int32)   # [c0, c1, c2, c3]
+    probs = mapper.pin_probabilities(hist, jnp.float32(0.15))
+    np.testing.assert_allclose(np.asarray(probs), [0.0, 0.0, 0.5, 1.0],
+                               atol=1e-6)
+
+
+def test_coldness():
+    clock = jnp.asarray([0, 1, 2, 3], jnp.int8)
+    tracked = jnp.ones(4, bool)
+    np.testing.assert_allclose(
+        np.asarray(mapper.coldness_from_clock(clock, tracked)),
+        [1.0, 0.5, 1 / 3, 0.25])
+    untracked = jnp.zeros(4, bool)
+    np.testing.assert_allclose(
+        np.asarray(mapper.coldness_from_clock(clock, untracked)), [1.0] * 4)
