@@ -182,7 +182,9 @@ def fig11d_partitions(n_ops=8000):
             n += BATCH
         wall = time.time() - t0
         rows.append(f"fig11d-partitions{p},{1e6 * wall / n:.3f},"
-                    f"wall_kops={n / wall / 1e3:.1f}")
+                    f"wall_kops={n / wall / 1e3:.1f};"
+                    f"dispatches_per_kop={1e3 * db.dispatches / n:.2f};"
+                    f"dropped={db.dropped}")
     return rows
 
 

@@ -3,11 +3,14 @@
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig9] [--quick]
 
 Prints ``name,us_per_call,derived`` CSV rows and a paper-claims validation
-summary (ratios, not absolute Kops -- see DESIGN.md §6).
+summary (ratios, not absolute Kops -- see DESIGN.md §6), and writes the
+parsed metrics (including ``dispatches_per_kop``, the fused engine step's
+headline metric) to ``BENCH_RESULTS.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -18,6 +21,8 @@ def main(argv=None) -> None:
                     help="comma-separated benchmark names")
     ap.add_argument("--quick", action="store_true",
                     help="fewer ops per benchmark")
+    ap.add_argument("--json", default="BENCH_RESULTS.json",
+                    help="output json path ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_benchmarks as P
@@ -39,6 +44,10 @@ def main(argv=None) -> None:
             sys.stdout.flush()
             rows.append(row)
         print(f"# {nm} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_parse(rows), f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
     _validate(rows)
 
 

@@ -7,9 +7,12 @@ Layers:
   msc                    -- multi-tiered storage compaction metric (§5)
   compaction             -- the compaction engine (§5.3, §6)
   policy                 -- read-triggered compaction state machine (§5.3)
-  db                     -- client facade + shared-nothing partitions
+  engine                 -- device-resident fused op+compaction step (jit)
+  db                     -- client facades over the engine (+ partitions)
   paged_kv               -- tiered paged KV-cache built on the core (ours)
   embedding_store        -- tiered embedding table for huge vocabs (ours)
 """
 from repro.core.tiers import TierConfig, TierState  # noqa: F401
+from repro.core.engine import (EngineConfig, EngineState,  # noqa: F401
+                               OpBatch, OpResult)
 from repro.core.db import PrismDB, PartitionedDB    # noqa: F401

@@ -52,6 +52,7 @@ class CompactionStats(NamedTuple):
     n_demoted: jax.Array
     n_promoted: jax.Array
     n_merged: jax.Array
+    n_superseded: jax.Array    # stale slow copies merged away (duplicates)
     n_run_read: jax.Array      # slow objects read (whole window, seq I/O)
     n_run_written: jax.Array   # slow objects written (new runs, seq I/O)
 
@@ -265,11 +266,13 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
     t_f = jnp.sum(sm.astype(jnp.int32))
     n_dem = jnp.sum(demote_data.astype(jnp.int32))
     n_pro = jnp.sum(pro_ok.astype(jnp.int32))
+    n_sup = jnp.sum(superseded.astype(jnp.int32))
     ctr = state.ctr._replace(
         compactions=state.ctr.compactions + 1,
         demoted=state.ctr.demoted + n_dem,
         promoted=state.ctr.promoted + n_pro,
         slow_reads=state.ctr.slow_reads + t_f,
+        comp_reads=state.ctr.comp_reads + t_f,
         slow_writes=state.ctr.slow_writes + n_merged,
         fast_reads=state.ctr.fast_reads + n_dem,
         fast_writes=state.ctr.fast_writes + n_pro,
@@ -280,7 +283,7 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
     stats = CompactionStats(
         selected_lo=lo, selected_hi=hi, score=scores[best],
         n_demoted=n_dem, n_promoted=n_pro, n_merged=n_merged,
-        n_run_read=t_f, n_run_written=n_merged)
+        n_superseded=n_sup, n_run_read=t_f, n_run_written=n_merged)
 
     new_state = state._replace(
         fast_keys=fast_keys, fast_vals=fast_vals, fast_ver=fast_ver,

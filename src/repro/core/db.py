@@ -1,27 +1,38 @@
 """PrismDB facade: the paper's client interface over the functional core.
 
-``PrismDB`` drives jitted batch ops + watermark/read-triggered compactions
-from Python (the paper's worker/compaction threads).  ``PartitionedDB``
-vmaps the whole store over P shared-nothing partitions (paper §4.1): each
+Both facades are thin shells over ``repro.core.engine``: a client batch is
+ONE jitted ``engine_step`` dispatch that performs the data op and the whole
+compaction control plane (rate limit, watermark loop, §5.3 read-triggered
+policy) on device -- no host syncs in the hot loop.  ``PartitionedDB`` is
+the same core vmapped over P shared-nothing partitions (paper §4.1): each
 partition owns a hash slice of the key space with its own tracker, mapper,
-buckets and runs -- zero cross-partition synchronization, exactly the
-paper's design (and how the page pool shards over mesh devices).
+buckets and runs; single-partition is just P = 1 of the vmapped path.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import compaction, policy, tiers
-from repro.core.tiers import TierConfig, TierState
+from repro.core import engine, policy, tiers
+from repro.core.engine import EngineConfig, OpBatch
+from repro.core.tiers import TierConfig
 from repro.core.utils import hash_mod
 
 
 class PrismDB:
-    """Single-partition store. Batched Put/Get/Delete/Scan + compaction."""
+    """Single-partition store. Batched Put/Get/Delete/Scan + compaction.
+
+    ``dispatches`` counts jitted engine calls issued by this facade: in the
+    steady state it is exactly one per client batch (the harness reports
+    dispatches per 1k ops from it).
+
+    A single batch can never exceed ``fast_slots`` live keys: the rate
+    limiter frees space *before* the insert, but no amount of compaction
+    makes the fast tier bigger than itself -- overflow keys in one
+    oversized batch are dropped (same ceiling as the pre-fused host loop).
+    """
 
     def __init__(self, cfg: TierConfig, seed: int = 0,
                  pol_cfg: policy.PolicyConfig | None = None,
@@ -36,111 +47,72 @@ class PrismDB:
         virtual fill accounting; duplicates merge away at compaction."""
         self.cfg = cfg
         self.append_only = append_only
-        self._virtual_extra = 0
-        self.state = tiers.init(cfg)
-        self.pol_cfg = pol_cfg or policy.PolicyConfig()
-        self.pol = policy.init()
-        self.rng = jax.random.PRNGKey(seed)
-        self.promote = promote
-        self.precise = precise
-        self._put = jax.jit(functools.partial(tiers.put_batch, cfg=cfg))
-        self._get = jax.jit(functools.partial(tiers.get_batch, cfg=cfg))
-        self._del = jax.jit(functools.partial(tiers.delete_batch, cfg=cfg))
-        self._compact = jax.jit(functools.partial(
-            compaction.compact_once, cfg=cfg, promote=promote,
-            precise=precise, selection=selection, pin_mode=pin_mode))
-        self._needs = jax.jit(functools.partial(
-            compaction.needs_compaction, cfg=cfg))
-        self._below = jax.jit(functools.partial(
-            compaction.below_low_watermark, cfg=cfg))
-        self._free = jax.jit(tiers.free_fast_slots)
-        self._pol_step = jax.jit(functools.partial(
-            policy.step, cfg=self.pol_cfg))
-        self.compaction_log: list = []
+        self.ecfg = EngineConfig(
+            tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
+            precise=precise, selection=selection, pin_mode=pin_mode,
+            append_only=append_only)
+        self.estate = engine.init(self.ecfg, jax.random.PRNGKey(seed))
+        self._step = engine.jit_step(self.ecfg)
+        self._run = engine.jit_run_ops(self.ecfg)
+        self.dispatches = 0
+
+    # -- engine-state views ------------------------------------------------
+    # Snapshot copies: engine-state buffers are DONATED to the next
+    # dispatch, so a live view handed out here would be invalidated by the
+    # next put/get.  Copies keep the old read-anytime contract.
+    @property
+    def state(self) -> tiers.TierState:
+        return engine.dealias(self.estate.tier)
+
+    @property
+    def pol(self) -> policy.PolicyState:
+        return engine.dealias(self.estate.pol)
+
+    @property
+    def promote(self) -> bool:
+        return self.ecfg.promote
+
+    @property
+    def precise(self) -> bool:
+        return self.ecfg.precise
 
     # -- client ops --------------------------------------------------------
-    def put(self, keys, vals=None, valid=None):
-        keys = jnp.asarray(keys, jnp.int32)
-        if vals is None:
-            vals = jnp.broadcast_to(
-                keys[:, None].astype(jnp.float32),
-                (keys.shape[0], self.cfg.value_width))
-        if valid is None:
-            valid = jnp.ones(keys.shape, bool)
-        # rate-limit (paper §4.2): incoming writes stall while the compaction
-        # job frees fast-tier space, so inserts never drop.
-        self._ensure_free(int(keys.shape[0]))
-        before_free = int(self._free(self.state))
-        self.state = self._put(self.state, keys=keys, vals=vals, valid=valid)
-        if self.append_only:
-            # versions appended, not updated: in-place updates still consume
-            # virtual space until the next merge
-            fresh = before_free - int(self._free(self.state))
-            self._virtual_extra += int(keys.shape[0]) - fresh
-        self._maybe_compact()
+    def _dispatch(self, op: OpBatch):
+        self.estate, res = self._step(self.estate, op)
+        self.dispatches += 1
+        return res
 
-    def _ensure_free(self, need: int, max_rounds: int = 256):
-        for _ in range(max_rounds):
-            if int(self._free(self.state)) - self._virtual_extra >= need:
-                return
-            self.state, stats = self._compact(self.state, rng=self._split())
-            if self.append_only:
-                # duplicates within the compacted key range merge away
-                frac = (int(stats.selected_hi) - int(stats.selected_lo)) \
-                    / max(self.cfg.key_space, 1)
-                self._virtual_extra = int(self._virtual_extra
-                                          * max(1.0 - frac, 0.0))
-            self.compaction_log.append(jax.tree.map(
-                lambda x: x.item() if hasattr(x, "item") else x, stats))
+    def put(self, keys, vals=None, valid=None):
+        self._dispatch(engine.make_op(engine.PUT, keys, vals, valid,
+                                      value_width=self.cfg.value_width))
 
     def get(self, keys, valid=None):
-        keys = jnp.asarray(keys, jnp.int32)
-        if valid is None:
-            valid = jnp.ones(keys.shape, bool)
-        self.state, vals, found, src = self._get(self.state, keys=keys,
-                                                 valid=valid)
-        self._maybe_read_compact()
-        return vals, found, src
+        res = self._dispatch(engine.make_op(
+            engine.GET, keys, valid=valid,
+            value_width=self.cfg.value_width))
+        return res.vals, res.found, res.src
 
     def delete(self, keys, valid=None):
-        keys = jnp.asarray(keys, jnp.int32)
-        if valid is None:
-            valid = jnp.ones(keys.shape, bool)
-        self.state = self._del(self.state, keys=keys, valid=valid)
+        self._dispatch(engine.make_op(engine.DELETE, keys, valid=valid,
+                                      value_width=self.cfg.value_width))
 
     def scan(self, lo: int, n: int):
-        return tiers.scan(self.state, jnp.int32(lo), n)
+        return tiers.scan(self.estate.tier, jnp.int32(lo), n)
 
-    # -- compaction drivers -------------------------------------------------
-    def _split(self):
-        self.rng, sub = jax.random.split(self.rng)
-        return sub
-
-    def _maybe_compact(self, max_rounds: int = 64):
-        if not bool(self._needs(self.state)):
-            return
-        for _ in range(max_rounds):
-            self.state, stats = self._compact(self.state, rng=self._split())
-            self.compaction_log.append(jax.tree.map(
-                lambda x: x.item() if hasattr(x, "item") else x, stats))
-            if bool(self._below(self.state)):
-                break
-
-    def _maybe_read_compact(self):
-        total = self.state.ctr.gets + self.state.ctr.puts
-        self.pol, go = self._pol_step(self.pol, self.state, total_ops=total)
-        if bool(go) and int(self.pol.phase) == policy.ACTIVE:
-            for _ in range(self.pol_cfg.compactions_per_epoch_step):
-                self.state, stats = self._compact(self.state, rng=self._split())
-                self.compaction_log.append(jax.tree.map(
-                    lambda x: x.item() if hasattr(x, "item") else x, stats))
+    def run_ops(self, ops: OpBatch):
+        """Drive a stacked op stream (leading axis = batches) in ONE
+        dispatch via ``lax.scan``; returns stacked OpResults."""
+        self.estate, res = self._run(self.estate, ops)
+        self.dispatches += 1
+        return res
 
     # -- introspection -------------------------------------------------------
     @property
     def counters(self) -> dict:
         """Object-unit counters + derived byte counters (python ints, no
-        overflow)."""
-        c = {k: int(v) for k, v in self.state.ctr._asdict().items()}
+        overflow).  This is a host readback -- introspection only, never on
+        the hot path."""
+        c = {k: int(v) for k, v in self.estate.tier.ctr._asdict().items()}
         vb = self.cfg.value_bytes
         c["fast_bytes_read"] = c["fast_reads"] * vb
         c["fast_bytes_written"] = c["fast_writes"] * vb
@@ -149,78 +121,97 @@ class PrismDB:
         return c
 
     def occupancy(self) -> float:
-        return float(tiers.fast_occupancy(self.state))
+        return float(tiers.fast_occupancy(self.estate.tier))
+
+
+def route_batch(keys: jax.Array, p: int, per_part: int
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Scatter a batch into [P, per_part] padded per-partition batches.
+
+    Returns (routed, valid, n_dropped): keys beyond ``per_part`` in one
+    partition do not fit the pad and are counted, never silently lost.
+    """
+    part = hash_mod(keys, p, salt=4)
+    order = jnp.argsort(part)
+    keys_s, part_s = keys[order], part[order]
+    rank = jnp.arange(keys.shape[0]) - jnp.searchsorted(
+        part_s, part_s, side="left")
+    out = jnp.full((p, per_part), -1, jnp.int32)
+    ok = rank < per_part
+    tgt_p = jnp.where(ok, part_s, p)          # overflow scatters out of range
+    out = out.at[tgt_p, jnp.clip(rank, 0, per_part - 1)].set(
+        keys_s, mode="drop")
+    dropped = jnp.sum((~ok).astype(jnp.int32))
+    return out, out >= 0, dropped
+
+
+def _partitioned_step(estate, keys, kind: int, cfg: EngineConfig, p: int,
+                      per_part: int):
+    """Route + vmapped engine_step: one dispatch for the whole batch."""
+    routed, valid, dropped = route_batch(keys, p, per_part)
+    vals = jnp.broadcast_to(
+        routed[..., None].astype(jnp.float32),
+        (*routed.shape, cfg.tier.value_width))
+    op = OpBatch(kind=jnp.int32(kind), keys=routed, vals=vals, valid=valid)
+    step = functools.partial(engine.engine_step, cfg=cfg)
+    estate, res = jax.vmap(step, in_axes=(0, OpBatch(None, 0, 0, 0)))(
+        estate, op)
+    return estate, res, dropped
 
 
 class PartitionedDB:
     """Shared-nothing partitions via vmap (paper §4.1, Fig. 11d).
 
-    Keys are routed by hash; every partition executes the same batched step
-    on its own slice (masked for load imbalance within the batch).
+    Keys are routed by hash; every partition executes the same jitted
+    ``engine_step`` on its own slice (masked for load imbalance within the
+    batch).  ``dropped`` counts keys that exceeded a partition's pad --
+    surfaced, not silently lost.
     """
 
     def __init__(self, cfg: TierConfig, n_partitions: int, seed: int = 0,
-                 promote: bool = True):
+                 promote: bool = True,
+                 pol_cfg: policy.PolicyConfig | None = None):
         self.cfg = cfg
         self.p = n_partitions
-        self.state = jax.vmap(lambda _: tiers.init(cfg))(
-            jnp.arange(n_partitions))
-        self.rng = jax.random.PRNGKey(seed)
-        self.promote = promote
-        self._vput = jax.jit(jax.vmap(
-            functools.partial(tiers.put_batch, cfg=cfg)))
-        self._vget = jax.jit(jax.vmap(
-            functools.partial(tiers.get_batch, cfg=cfg)))
-        self._vcompact = jax.jit(jax.vmap(functools.partial(
-            compaction.compact_once, cfg=cfg, promote=promote)))
-        self._vocc = jax.jit(jax.vmap(tiers.fast_occupancy))
+        self.ecfg = EngineConfig(
+            tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote)
+        rngs = jax.random.split(jax.random.PRNGKey(seed), n_partitions)
+        self.estate = jax.vmap(
+            functools.partial(engine.init, self.ecfg))(rngs)
+        self._dropped = jnp.zeros((), jnp.int32)
+        self._step = jax.jit(
+            functools.partial(_partitioned_step, cfg=self.ecfg,
+                              p=n_partitions),
+            static_argnames=("kind", "per_part"))
+        self.dispatches = 0
 
-    def route(self, keys: jax.Array, per_part: int):
-        """Scatter a batch into [P, per_part] padded per-partition batches."""
-        part = hash_mod(keys, self.p, salt=4)
-        order = jnp.argsort(part)
-        keys_s, part_s = keys[order], part[order]
-        rank = jnp.arange(keys.shape[0]) - jnp.searchsorted(
-            part_s, part_s, side="left")
-        out = jnp.full((self.p, per_part), -1, jnp.int32)
-        ok = rank < per_part
-        out = out.at[part_s[ok], rank[ok]].set(keys_s[ok])
-        return out, out >= 0
+    @property
+    def state(self) -> tiers.TierState:
+        # snapshot copy: see PrismDB.state (donation invalidates live views)
+        return engine.dealias(self.estate.tier)
+
+    @property
+    def dropped(self) -> int:
+        """Total keys that exceeded a partition pad (routing overflow)."""
+        return int(self._dropped)
+
+    def _dispatch(self, keys, kind: int):
+        keys = jnp.asarray(keys, jnp.int32)
+        per = max(2 * keys.shape[0] // self.p, 8)
+        self.estate, res, dropped = self._step(self.estate, keys, kind=kind,
+                                               per_part=per)
+        self._dropped = self._dropped + dropped
+        self.dispatches += 1
+        return res
 
     def put(self, keys):
-        keys = jnp.asarray(keys, jnp.int32)
-        per = max(2 * keys.shape[0] // self.p, 8)
-        routed, valid = self.route(keys, per)
-        vals = jnp.broadcast_to(
-            routed[..., None].astype(jnp.float32),
-            (*routed.shape, self.cfg.value_width))
-        self.state = self._vput(self.state, keys=routed, vals=vals,
-                                valid=valid)
-        self._maybe_compact()
+        self._dispatch(keys, engine.PUT)
 
     def get(self, keys):
-        keys = jnp.asarray(keys, jnp.int32)
-        per = max(2 * keys.shape[0] // self.p, 8)
-        routed, valid = self.route(keys, per)
-        self.state, vals, found, src = self._vget(self.state, keys=routed,
-                                                  valid=valid)
-        return vals, found, src
-
-    def _maybe_compact(self, max_rounds: int = 32):
-        occ = self._vocc(self.state)
-        if not bool(jnp.any(occ >= self.cfg.high_watermark)):
-            return
-        for _ in range(max_rounds):
-            self.rng, sub = jax.random.split(self.rng)
-            rngs = jax.random.split(sub, self.p)
-            # every partition compacts in lock-step (idle ones pay a no-op
-            # merge); shared-nothing means no synchronization beyond vmap.
-            self.state, _ = self._vcompact(self.state, rng=rngs)
-            occ = self._vocc(self.state)
-            if not bool(jnp.any(occ >= self.cfg.low_watermark)):
-                break
+        res = self._dispatch(keys, engine.GET)
+        return res.vals, res.found, res.src
 
     @property
     def counters(self) -> dict:
         return {k: [int(x) for x in v]
-                for k, v in self.state.ctr._asdict().items()}
+                for k, v in self.estate.tier.ctr._asdict().items()}

@@ -22,7 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import compaction, tiers
+from repro.core import compaction, engine, tiers
 from repro.core.compaction import Movement
 from repro.core.tiers import TierConfig, TierState
 from repro.core.utils import alloc_slots, sorted_lookup
@@ -179,3 +179,41 @@ def _apply_movement(state: EmbedStoreState, cfg: EmbedStoreConfig,
 
 def needs_compaction(state: EmbedStoreState, cfg: EmbedStoreConfig):
     return compaction.needs_compaction(state.tier, cfg.tier())
+
+
+# ----------------------------------------------------- engine-core driver
+
+def movement_mirror(cfg: EmbedStoreConfig):
+    """Engine-core mirror: replay compaction Movements on the row pools."""
+    def mirror(payload: EmbedStoreState, mv: Movement) -> EmbedStoreState:
+        return _apply_movement(payload, cfg, mv)
+    return mirror
+
+
+def engine_config(cfg: EmbedStoreConfig, **kw) -> engine.EngineConfig:
+    return engine.EngineConfig(tier=cfg.tier(), **kw)
+
+
+def engine_init(cfg: EmbedStoreConfig, rng: jax.Array,
+                ecfg: engine.EngineConfig | None = None
+                ) -> engine.EngineState:
+    """Engine state whose payload is the row store (tier stripped: the
+    engine owns the authoritative TierState)."""
+    r_rows, r_eng = jax.random.split(rng)
+    state = init(cfg, r_rows)
+    return engine.init(ecfg or engine_config(cfg), r_eng,
+                       payload=state._replace(tier=None), tier=state.tier)
+
+
+def prepare_step(est: engine.EngineState, cfg: EmbedStoreConfig,
+                 ecfg: engine.EngineConfig, token_ids: jax.Array
+                 ) -> tuple[engine.EngineState, jax.Array]:
+    """Fused training-batch prepare: compaction headroom (with row-pool
+    mirroring) + row promotion, one jitted dispatch.  Returns fast-pool
+    slots for the token stream."""
+    mirror = movement_mirror(cfg)
+    est = engine.maintain(est, ecfg, need=token_ids.shape[0], mirror=mirror)
+    state = est.payload._replace(tier=est.tier)
+    state, slots = prepare_batch(state, cfg, token_ids)
+    est = est._replace(tier=state.tier, payload=state._replace(tier=None))
+    return est, slots

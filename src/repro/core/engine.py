@@ -1,0 +1,280 @@
+"""Device-resident engine step: the fused put/get/compact control plane.
+
+Before this module, every facade (``PrismDB``, ``PartitionedDB``, the
+serving engine, the embedding store) drove its own compaction loop from
+Python, blocking on device syncs (``int(free_slots)``, ``bool(needs)``)
+between every batch.  The paper's throughput claim rests on keeping the
+compaction control loop OFF the client's critical path (§4.2, §5.3); the
+JAX analogue is to run the whole control plane inside one jit so a client
+batch -- data op, rate limiting, watermark compactions, the §5.3
+read-triggered policy, and payload mirroring -- is a single dispatch.
+
+Building blocks (all jit-/vmap-/scan-safe, static shapes):
+
+  ``EngineState``   unified pytree: TierState + PolicyState + rng +
+                    append-only virtual fill + an arbitrary ``payload``
+                    pytree mirrored through compactions (KV pages,
+                    embedding rows; ``()`` when the store is metadata-only)
+  ``engine_step``   one client batch: op switch (put/get/delete) + the
+                    full maintenance plane as ``lax.while_loop``s
+  ``run_ops``       ``lax.scan`` over a stacked op stream: a whole
+                    workload segment under one dispatch
+  ``maintain``      the bounded compaction loop alone (rate limit +
+                    watermark hysteresis), reused by the serving engine
+                    and the embedding store around their own data ops
+  ``read_policy``   the §5.3 DETECT/ACTIVE/COOLDOWN step + its
+                    compaction budget
+
+``mirror(payload, movement) -> payload`` replays each compaction's
+``Movement`` on the payload pools inside the same jitted step -- the
+tier_compact kernel's role on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compaction, policy, tiers
+from repro.core.tiers import TierConfig, TierState
+
+PUT, GET, DELETE = 0, 1, 2
+
+MirrorFn = Callable[[Any, compaction.Movement], Any]
+
+
+class EngineConfig(NamedTuple):
+    """Static engine parameters (closure constants under jit)."""
+    tier: TierConfig
+    pol: policy.PolicyConfig = policy.PolicyConfig()
+    promote: bool = True
+    precise: bool = False
+    selection: str = "msc"
+    pin_mode: str = "object"
+    append_only: bool = False
+    max_rounds: int = 256       # compaction-round bound per engine step
+                                # (matches the old host rate-limit loop; the
+                                # while_loop body is traced once regardless)
+
+
+class EngineState(NamedTuple):
+    """Everything the control plane owns, as one donatable pytree."""
+    tier: TierState
+    pol: policy.PolicyState
+    rng: jax.Array
+    virtual_extra: jax.Array    # i32: append-only phantom fast-tier fill
+    payload: Any = ()           # pytree mirrored through compactions
+
+
+class OpBatch(NamedTuple):
+    """One client batch.  ``kind`` is a traced scalar so an op stream can be
+    stacked and scanned; ``vals`` is ignored by get/delete."""
+    kind: jax.Array             # i32 scalar: PUT / GET / DELETE
+    keys: jax.Array             # i32[B]
+    vals: jax.Array             # f32[B, V]
+    valid: jax.Array            # bool[B]
+
+
+class OpResult(NamedTuple):
+    vals: jax.Array             # f32[B, V] (zeros unless get)
+    found: jax.Array            # bool[B]
+    src: jax.Array              # i32[B]: 0=fast 1=slow -1=miss/other
+
+
+def dealias(tree):
+    """Copy every leaf into its own buffer.  Freshly-built states reuse one
+    zero buffer across fields (``Counters.zeros``); donation rejects a
+    buffer donated twice, so donatable states must hold unique buffers."""
+    return jax.tree.map(
+        lambda x: jnp.array(x) if isinstance(x, jax.Array) else x, tree)
+
+
+def init(cfg: EngineConfig, rng: jax.Array, payload: Any = (),
+         tier: TierState | None = None) -> EngineState:
+    return dealias(EngineState(
+        tier=tier if tier is not None else tiers.init(cfg.tier),
+        pol=policy.init(), rng=rng,
+        virtual_extra=jnp.zeros((), jnp.int32), payload=payload))
+
+
+def make_op(kind: int, keys: jax.Array, vals: jax.Array | None = None,
+            valid: jax.Array | None = None, *,
+            value_width: int) -> OpBatch:
+    """Build an OpBatch with the facade defaults (value = broadcast key)."""
+    keys = jnp.asarray(keys, jnp.int32)
+    if vals is None:
+        vals = jnp.broadcast_to(keys[:, None].astype(jnp.float32),
+                                (keys.shape[0], value_width))
+    if valid is None:
+        valid = jnp.ones(keys.shape, bool)
+    return OpBatch(kind=jnp.int32(kind), keys=keys,
+                   vals=jnp.asarray(vals, jnp.float32), valid=valid)
+
+
+# ------------------------------------------------------------ compaction
+
+def _compact1(state: EngineState, cfg: EngineConfig,
+              mirror: MirrorFn | None,
+              force_pin_keys: jax.Array | None) -> EngineState:
+    """One compaction + payload mirroring + append-only fill accounting."""
+    rng, sub = jax.random.split(state.rng)
+    out = compaction.compact_once(
+        state.tier, cfg.tier, rng=sub, promote=cfg.promote,
+        precise=cfg.precise, selection=cfg.selection, pin_mode=cfg.pin_mode,
+        with_movement=mirror is not None, force_pin_keys=force_pin_keys)
+    if mirror is None:
+        tier, stats = out
+        payload = state.payload
+    else:
+        tier, stats, mv = out
+        payload = mirror(state.payload, mv)
+    ve = state.virtual_extra
+    if cfg.append_only:
+        # phantom versions merge away only when the compaction actually
+        # merged duplicates: decay by the measured superseded-copy count,
+        # not by key-range coverage (which decayed even on no-op merges).
+        ve = jnp.maximum(ve - stats.n_superseded, 0)
+    return state._replace(tier=tier, rng=rng, virtual_extra=ve,
+                          payload=payload)
+
+
+def maintain(state: EngineState, cfg: EngineConfig,
+             need: jax.Array | int = 0, *, mirror: MirrorFn | None = None,
+             force_pin_keys: jax.Array | None = None) -> EngineState:
+    """Bounded compaction loop, fully on device.
+
+    Compacts while (a) usable fast slots (free minus append-only virtual
+    fill) are below ``need`` -- the paper's §4.2 rate limit: writes stall
+    until the compaction job frees space -- or (b) occupancy crossed the
+    high watermark, continuing with hysteresis until below the low
+    watermark.  ``cfg.max_rounds`` bounds the loop (static trip bound).
+    """
+    need = jnp.asarray(need, jnp.int32)
+
+    def usable(s: EngineState) -> jax.Array:
+        return tiers.free_fast_slots(s.tier) - s.virtual_extra
+
+    def cond(carry):
+        s, rounds, wm = carry
+        occ = tiers.fast_occupancy(s.tier)
+        return (rounds < cfg.max_rounds) & (
+            (usable(s) < need) | (wm & (occ >= cfg.tier.low_watermark)))
+
+    def body(carry):
+        s, rounds, wm = carry
+        return _compact1(s, cfg, mirror, force_pin_keys), rounds + 1, wm
+
+    wm0 = tiers.fast_occupancy(state.tier) >= cfg.tier.high_watermark
+    state, _, _ = lax.while_loop(cond, body,
+                                 (state, jnp.zeros((), jnp.int32), wm0))
+    return state
+
+
+def read_policy(state: EngineState, cfg: EngineConfig, *,
+                mirror: MirrorFn | None = None,
+                force_pin_keys: jax.Array | None = None) -> EngineState:
+    """§5.3 read-triggered policy step + its per-step compaction budget."""
+    total = state.tier.ctr.gets + state.tier.ctr.puts
+    pol, go = policy.step(state.pol, state.tier, cfg.pol, total_ops=total)
+    state = state._replace(pol=pol)
+
+    def run(s: EngineState) -> EngineState:
+        return lax.fori_loop(
+            0, cfg.pol.compactions_per_epoch_step,
+            lambda _, ss: _compact1(ss, cfg, mirror, force_pin_keys), s)
+
+    return lax.cond(go & (pol.phase == policy.ACTIVE), run, lambda s: s,
+                    state)
+
+
+# ------------------------------------------------------------ engine step
+
+def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
+                mirror: MirrorFn | None = None,
+                force_pin_keys: jax.Array | None = None
+                ) -> tuple[EngineState, OpResult]:
+    """One client batch, control plane included: a single dispatch.
+
+    put    -> rate-limit compactions, insert, append-only fill accounting,
+              watermark compactions
+    get    -> lookup, §5.3 policy step (+ its compactions)
+    delete -> tombstone/free
+    """
+    b, v = op.vals.shape
+    empty = OpResult(vals=jnp.zeros((b, v), jnp.float32),
+                     found=jnp.zeros((b,), bool),
+                     src=jnp.full((b,), -1, jnp.int32))
+
+    def do_put(s: EngineState):
+        need = jnp.sum(op.valid.astype(jnp.int32))
+        s = maintain(s, cfg, need=need, mirror=mirror,
+                     force_pin_keys=force_pin_keys)
+        before = tiers.free_fast_slots(s.tier)
+        tier = tiers.put_batch(s.tier, cfg.tier, op.keys, op.vals, op.valid)
+        s = s._replace(tier=tier)
+        if cfg.append_only:
+            # versions appended, not updated: in-place updates still consume
+            # virtual space until the next merge
+            fresh = before - tiers.free_fast_slots(tier)
+            s = s._replace(virtual_extra=s.virtual_extra
+                           + jnp.maximum(need - fresh, 0))
+        s = maintain(s, cfg, need=0, mirror=mirror,
+                     force_pin_keys=force_pin_keys)
+        return s, empty
+
+    def do_get(s: EngineState):
+        tier, vals, found, src = tiers.get_batch(s.tier, cfg.tier, op.keys,
+                                                 op.valid)
+        s = read_policy(s._replace(tier=tier), cfg, mirror=mirror,
+                        force_pin_keys=force_pin_keys)
+        return s, OpResult(vals=vals.astype(jnp.float32), found=found,
+                           src=src)
+
+    def do_delete(s: EngineState):
+        tier = tiers.delete_batch(s.tier, cfg.tier, op.keys, op.valid)
+        return s._replace(tier=tier), empty
+
+    return lax.switch(op.kind, [do_put, do_get, do_delete], state)
+
+
+def run_ops(state: EngineState, ops: OpBatch, cfg: EngineConfig, *,
+            mirror: MirrorFn | None = None,
+            force_pin_keys: jax.Array | None = None
+            ) -> tuple[EngineState, OpResult]:
+    """Drive a whole op stream (OpBatch stacked on a leading axis) through
+    ``lax.scan``: N batches, one dispatch.  Results stack likewise."""
+    def step(s, op):
+        return engine_step(s, op, cfg, mirror=mirror,
+                           force_pin_keys=force_pin_keys)
+
+    return lax.scan(step, state, ops)
+
+
+@functools.lru_cache(maxsize=128)
+def _cached_jit(base, cfg: EngineConfig, donate: bool):
+    fn = functools.partial(base, cfg=cfg, mirror=None)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def jit_step(cfg: EngineConfig, *, mirror: MirrorFn | None = None,
+             donate: bool = True):
+    """Jitted ``engine_step`` with the state buffers donated.
+
+    Mirror-less steps are cached per EngineConfig so facade instances with
+    the same config share one compilation cache (benchmarks build many)."""
+    if mirror is None:
+        return _cached_jit(engine_step, cfg, donate)
+    fn = functools.partial(engine_step, cfg=cfg, mirror=mirror)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def jit_run_ops(cfg: EngineConfig, *, mirror: MirrorFn | None = None,
+                donate: bool = True):
+    """Jitted ``run_ops`` with the state buffers donated."""
+    if mirror is None:
+        return _cached_jit(run_ops, cfg, donate)
+    fn = functools.partial(run_ops, cfg=cfg, mirror=mirror)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())

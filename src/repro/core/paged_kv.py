@@ -322,6 +322,16 @@ def tail_page_keys(state: PagedKVState, cfg: PagedKVConfig) -> jax.Array:
     return jnp.sort(keys)
 
 
+def movement_mirror(cfg: PagedKVConfig):
+    """Engine-core mirror: replay compaction Movements on the page pools.
+
+    The payload may carry ``tier=None`` (the engine owns the authoritative
+    TierState); ``apply_movement`` only touches the payload pools."""
+    def mirror(payload: PagedKVState, mv: Movement) -> PagedKVState:
+        return apply_movement(payload, cfg, mv)
+    return mirror
+
+
 def compact(state: PagedKVState, cfg: PagedKVConfig, rng: jax.Array,
             promote: bool = True):
     """One MSC compaction + payload movement mirror."""

@@ -61,6 +61,7 @@ class Counters(NamedTuple):
     slow_writes: jax.Array
     bloom_probes: jax.Array
     bloom_fps: jax.Array
+    comp_reads: jax.Array      # slow reads issued by compactions (sequential)
     compactions: jax.Array
     demoted: jax.Array
     promoted: jax.Array

@@ -20,9 +20,11 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import paged_kv, policy, tiers
+from repro.core import engine as engine_core
+from repro.core import paged_kv, policy
 from repro.core.paged_kv import PagedKVConfig, PagedKVState
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
@@ -101,28 +103,73 @@ class Request:
     done: bool = False
 
 
+def _tick(est: engine_core.EngineState, params, tokens, valid,
+          mcfg: ModelConfig, kv_cfg: PagedKVConfig,
+          ecfg: engine_core.EngineConfig):
+    """One fused engine tick, entirely on device: tier maintenance
+    (rate-limit + watermark compactions with payload-page mirroring), the
+    §5.3 read-triggered policy, then the decode step.  One dispatch.
+
+    ``est.payload`` is the PagedKVState with its ``tier`` field stripped
+    (the authoritative TierState lives in ``est.tier``)."""
+    mirror = paged_kv.movement_mirror(kv_cfg)
+    kv = est.payload._replace(tier=est.tier)
+    fpk = paged_kv.tail_page_keys(kv, kv_cfg)
+    need = jnp.sum(valid.astype(jnp.int32))
+    est = engine_core.maintain(est, ecfg, need=need, mirror=mirror,
+                               force_pin_keys=fpk)
+    est = engine_core.read_policy(est, ecfg, mirror=mirror,
+                                  force_pin_keys=fpk)
+
+    kv = est.payload._replace(tier=est.tier)
+    seq_ids = jnp.arange(kv_cfg.max_seqs, dtype=jnp.int32)
+    logits, kv = paged_decode_step(mcfg, kv_cfg, params, kv, tokens,
+                                   seq_ids, kv.seq_len, valid)
+    est = est._replace(tier=kv.tier, payload=kv._replace(tier=None))
+    return est, logits
+
+
 class ServeEngine:
-    """Continuous batching + tiered-KV maintenance loop."""
+    """Continuous batching + tiered-KV maintenance loop.
+
+    Request orchestration (admission, prompt feeding, retirement) stays in
+    Python; everything the device touches -- compaction control plane,
+    payload mirroring, policy, decode -- is one jitted ``_tick``."""
 
     def __init__(self, mcfg: ModelConfig, kv_cfg: PagedKVConfig, params,
                  seed: int = 0, pol_cfg: policy.PolicyConfig | None = None):
         self.mcfg = mcfg
         self.cfg = kv_cfg
         self.params = params
-        self.kv = paged_kv.init(kv_cfg)
-        self.rng = jax.random.PRNGKey(seed)
-        self.pol = policy.init()
         self.pol_cfg = pol_cfg or policy.PolicyConfig(
             epoch_ops=512, cooldown_ops=2048, read_heavy_frac=0.05,
             slow_tracked_frac=0.05)
+        self.ecfg = engine_core.EngineConfig(tier=kv_cfg.tier(),
+                                             pol=self.pol_cfg)
+        kv = paged_kv.init(kv_cfg)
+        self.est = engine_core.init(self.ecfg, jax.random.PRNGKey(seed),
+                                    payload=kv._replace(tier=None),
+                                    tier=kv.tier)
         self.queue: list[Request] = []
         self.active: dict[int, Request] = {}     # seq_slot -> request
         self.free_slots = list(range(kv_cfg.max_seqs))
-        self._step = jax.jit(functools.partial(paged_decode_step, mcfg,
-                                               kv_cfg))
-        self._compact = jax.jit(
-            functools.partial(paged_kv.compact, cfg=kv_cfg))
-        self.stats = {"steps": 0, "compactions": 0, "retired": 0}
+        self._tick = jax.jit(functools.partial(
+            _tick, mcfg=mcfg, kv_cfg=kv_cfg, ecfg=self.ecfg),
+            donate_argnums=(0,))
+        self._stats = {"steps": 0, "retired": 0}
+        self.dispatches = 0
+
+    @property
+    def kv(self) -> PagedKVState:
+        # snapshot copy: the engine state is donated to the next tick, so a
+        # live view would be invalidated by it (introspection only)
+        return engine_core.dealias(
+            self.est.payload._replace(tier=self.est.tier))
+
+    @property
+    def stats(self) -> dict:
+        return {**self._stats,
+                "compactions": int(self.est.tier.ctr.compactions)}
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -134,58 +181,42 @@ class ServeEngine:
             slot = self.free_slots.pop(0)
             req.seq_slot = slot
             # reset the sequence slot
-            self.kv = self.kv._replace(
-                seq_len=self.kv.seq_len.at[slot].set(0))
+            payload = self.est.payload
+            payload = payload._replace(
+                seq_len=payload.seq_len.at[slot].set(0))
+            self.est = self.est._replace(payload=payload)
             self.active[slot] = req
 
     # ----------------------------------------------------------- service
-    def _headroom(self, need: int, max_rounds: int = 64):
-        for _ in range(max_rounds):
-            if int(tiers.free_fast_slots(self.kv.tier)) >= need:
-                return
-            self.rng, sub = jax.random.split(self.rng)
-            self.kv, _ = self._compact(self.kv, rng=sub)
-            self.stats["compactions"] += 1
-
-    def _maybe_read_compact(self):
-        total = self.kv.tier.ctr.gets + self.kv.tier.ctr.puts
-        self.pol, go = policy.step(self.pol, self.kv.tier, self.pol_cfg,
-                                   total)
-        if bool(go) and int(self.pol.phase) == policy.ACTIVE:
-            self.rng, sub = jax.random.split(self.rng)
-            self.kv, _ = self._compact(self.kv, rng=sub)
-            self.stats["compactions"] += 1
-
     def step(self):
-        """One engine tick: admit, maintain tiers, decode one token for
-        every active sequence (prompts feed token-by-token: prefill and
-        decode share the paged write path)."""
+        """One engine tick: admit, then one fused device dispatch (tier
+        maintenance + decode) for every active sequence (prompts feed
+        token-by-token: prefill and decode share the paged write path)."""
         self._admit()
         if not self.active:
             return False
         b = self.cfg.max_seqs
-        tokens = jnp.zeros((b,), jnp.int32)
-        seq_ids = jnp.arange(b, dtype=jnp.int32)
-        valid = jnp.zeros((b,), bool)
+        sl = np.asarray(self.est.payload.seq_len)    # one host readback
+        tokens = np.zeros((b,), np.int32)
+        valid = np.zeros((b,), bool)
         for slot, req in self.active.items():
-            n_out = int(self.kv.seq_len[slot])
+            n_out = int(sl[slot])
             tok = req.prompt[n_out] if n_out < len(req.prompt) else \
                 (req.out[-1] if req.out else 0)
-            tokens = tokens.at[slot].set(int(tok))
-            valid = valid.at[slot].set(True)
-        pos = self.kv.seq_len
+            tokens[slot] = int(tok)
+            valid[slot] = True
 
-        self._headroom(need=len(self.active))
-        self._maybe_read_compact()
-        logits, self.kv = self._step(self.params, self.kv, tokens, seq_ids,
-                                     pos, valid)
-        self.stats["steps"] += 1
+        self.est, logits = self._tick(self.est, self.params,
+                                      jnp.asarray(tokens),
+                                      jnp.asarray(valid))
+        self.dispatches += 1
+        self._stats["steps"] += 1
 
-        nxt = jnp.argmax(logits, axis=-1)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        sl = np.asarray(self.est.payload.seq_len)
         retired = []
         for slot, req in self.active.items():
-            n = int(self.kv.seq_len[slot])
-            if n > len(req.prompt):                 # generating
+            if int(sl[slot]) > len(req.prompt):     # generating
                 req.out.append(int(nxt[slot]))
             if len(req.out) >= req.max_new:
                 req.done = True
@@ -194,7 +225,7 @@ class ServeEngine:
             # retired sequences' pages go cold; MSC demotes them later
             self.active.pop(slot)
             self.free_slots.append(slot)
-            self.stats["retired"] += 1
+            self._stats["retired"] += 1
         return True
 
     def run(self, max_ticks: int = 10000):
@@ -206,4 +237,4 @@ class ServeEngine:
 
     @property
     def counters(self) -> dict:
-        return {k: int(v) for k, v in self.kv.tier.ctr._asdict().items()}
+        return {k: int(v) for k, v in self.est.tier.ctr._asdict().items()}

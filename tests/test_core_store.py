@@ -3,8 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:                                   # property tests need hypothesis;
+    from hypothesis import given, settings      # everything else runs
+    from hypothesis import strategies as st     # without it
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import PrismDB, TierConfig, bloom, compaction, msc, tiers
 
@@ -118,11 +123,7 @@ def test_rate_limiting_never_drops_writes():
         assert bool(jnp.all(found))
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.lists(st.tuples(st.sampled_from(["put", "get", "del"]),
-                          st.integers(0, 400)),
-                min_size=5, max_size=60))
-def test_oracle_random_ops(ops):
+def _oracle_random_ops(ops):
     """Random op sequence vs a python-dict oracle."""
     cfg = TierConfig(key_space=512, fast_slots=64, slow_slots=1024,
                      value_width=1, max_runs=32, run_size=32,
@@ -147,6 +148,22 @@ def test_oracle_random_ops(ops):
                 assert float(vals[0, 0]) == oracle[key]
             else:
                 assert not bool(found[0]), f"phantom key {key}"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["put", "get", "del"]),
+                              st.integers(0, 400)),
+                    min_size=5, max_size=60))
+    def test_oracle_random_ops(ops):
+        _oracle_random_ops(ops)
+else:
+    def test_oracle_random_ops():
+        """Deterministic fallback when hypothesis is absent."""
+        rng = np.random.default_rng(11)
+        ops = [(("put", "get", "del")[rng.integers(0, 3)],
+                int(rng.integers(0, 400))) for _ in range(60)]
+        _oracle_random_ops(ops)
 
 
 def test_bloom_no_false_negatives():

@@ -40,6 +40,35 @@ def test_init_seeds_all_vocab_rows_on_slow_tier():
     assert bool(np.asarray(state.tier.run_active).any())
 
 
+def test_engine_prepare_step_matches_dense_table():
+    """The fused engine path (maintain + promote in one jitted dispatch)
+    must produce the same rows as the dense reference table."""
+    import functools
+
+    from repro.core import engine
+
+    ecfg = es.engine_config(CFG)
+    est = es.engine_init(CFG, jax.random.PRNGKey(0))
+    ref = np.asarray(est.payload.rows_slow).copy()
+    prepare = jax.jit(functools.partial(es.prepare_step, cfg=CFG, ecfg=ecfg))
+    rng = np.random.default_rng(0)
+    dispatches = 0
+    for step in range(20):
+        toks = jnp.asarray(rng.zipf(1.3, 48) % CFG.vocab, jnp.int32)
+        est, slots = prepare(est, token_ids=toks)
+        dispatches += 1
+        state = est.payload._replace(tier=est.tier)
+        emb = es.lookup(state, toks)
+        np.testing.assert_allclose(np.asarray(emb), ref[np.asarray(toks)],
+                                   rtol=1e-4, atol=1e-6)
+        state = es.apply_grad(state, slots, jnp.ones((48, CFG.dim)) * 0.01,
+                              lr=1.0)
+        est = est._replace(payload=state._replace(tier=None))
+        np.add.at(ref, np.asarray(toks), -0.01)
+    assert dispatches == 20                  # one fused dispatch per batch
+    assert int(est.tier.ctr.demoted) > 0     # tiering happened inside them
+
+
 def test_hot_rows_stay_fast_under_zipf():
     """After steady zipfian traffic, the hottest tokens should resolve from
     the fast pool without promotion work."""

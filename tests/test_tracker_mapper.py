@@ -3,8 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:                                   # property tests need hypothesis;
+    from hypothesis import given, settings      # everything else runs
+    from hypothesis import strategies as st     # without it
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import mapper, tracker
 
@@ -66,10 +71,7 @@ def test_clock_protection_decays_before_eviction():
     assert bool(tracked_b[0])
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.integers(0, 499), min_size=1, max_size=64),
-       st.integers(0, 3))
-def test_batched_matches_seq_when_no_slot_collisions(keys, seed):
+def _batched_matches_seq(keys):
     """On batches whose keys map to distinct slots, the vectorized update
     must equal the exact ordered scan."""
     cap = 2048
@@ -89,10 +91,21 @@ def test_batched_matches_seq_when_no_slot_collisions(keys, seed):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.integers(0, 1000), min_size=4, max_size=4),
-       st.floats(0.0, 1.0))
-def test_mapper_budget_satisfied(hist, thresh):
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(0, 499), min_size=1, max_size=64),
+           st.integers(0, 3))
+    def test_batched_matches_seq_when_no_slot_collisions(keys, seed):
+        _batched_matches_seq(keys)
+else:
+    def test_batched_matches_seq_when_no_slot_collisions():
+        rng = np.random.default_rng(5)
+        for _ in range(5):
+            _batched_matches_seq(
+                rng.integers(0, 500, rng.integers(1, 64)).tolist())
+
+
+def _mapper_budget_satisfied(hist, thresh):
     h = jnp.asarray(hist, jnp.int32)
     probs = mapper.pin_probabilities(h, jnp.float32(thresh))
     assert bool(jnp.all((probs >= 0) & (probs <= 1)))
@@ -105,6 +118,20 @@ def test_mapper_budget_satisfied(hist, thresh):
     nonempty = np.asarray(hist) > 0
     vals = p[nonempty]
     assert all(vals[i] <= vals[i + 1] + 1e-6 for i in range(len(vals) - 1))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 1000), min_size=4, max_size=4),
+           st.floats(0.0, 1.0))
+    def test_mapper_budget_satisfied(hist, thresh):
+        _mapper_budget_satisfied(hist, thresh)
+else:
+    def test_mapper_budget_satisfied():
+        rng = np.random.default_rng(7)
+        for _ in range(10):
+            _mapper_budget_satisfied(rng.integers(0, 1001, 4).tolist(),
+                                     float(rng.random()))
 
 
 def test_mapper_example_from_paper():
