@@ -1,10 +1,14 @@
-"""Shared benchmark substrate: device cost model, workloads, system
-variants, and the workload runner.
+"""Shared benchmark substrate: device cost model, system variants, and
+the workload runner.
+
+Workload generation lives in ``repro.workloads`` (device-resident,
+fused into the engine scan) -- the old host-side numpy generators are
+gone.  A measured segment is TWO jitted dispatches total (warmup +
+measurement), regardless of length.
 
 Absolute Kops/s on this single-CPU container are not comparable to the
 paper's hardware; every claim we validate is a RATIO (DESIGN.md §6).
-Service time = modeled device I/O (Table 1 constants) + measured
-compaction CPU time.
+Service time = modeled device I/O (Table 1 constants).
 """
 from __future__ import annotations
 
@@ -12,9 +16,9 @@ import time
 from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import workloads as W
 from repro.core import PrismDB, TierConfig, policy
 
 
@@ -36,11 +40,13 @@ DEVICES = DeviceModel()
 def io_time_s(counters: dict, compaction_io: dict | None = None,
               dm: DeviceModel = DEVICES,
               fast_write_amp: float = 1.0) -> float:
-    """Modeled I/O seconds: client ops random, compaction I/O sequential.
+    """Modeled I/O seconds: client point ops random; compaction I/O and
+    range-scan reads sequential (runs are key-sorted).
 
-    Compaction sequential reads come from the ``comp_reads`` counter the
-    tier store maintains on device (no per-batch host attribution needed);
-    ``compaction_io={"seq_reads": n}`` overrides it if given.
+    Compaction sequential reads come from the ``comp_reads`` counter and
+    scan sequential reads from ``scan_reads`` -- both maintained on
+    device inside ``slow_reads``; ``compaction_io={"seq_reads": n}``
+    overrides the compaction share if given.
 
     ``fast_write_amp`` models the fast-tier-internal rewrite work of the
     architecture: PrismDB's slab layout updates in place (amp = 1); the
@@ -52,72 +58,14 @@ def io_time_s(counters: dict, compaction_io: dict | None = None,
     c = counters
     if compaction_io is None:
         compaction_io = {"seq_reads": c.get("comp_reads", 0)}
-    client_slow_reads = c["slow_reads"] - compaction_io["seq_reads"]
+    seq_reads = compaction_io["seq_reads"] + c.get("scan_reads", 0)
+    client_slow_reads = c["slow_reads"] - seq_reads
     t = (c["fast_reads"] * dm.fast_read_us
          + c["fast_writes"] * dm.fast_write_us * fast_write_amp
          + max(client_slow_reads, 0) * dm.slow_read_us
-         + compaction_io["seq_reads"] * dm.slow_seq_read_us_per_obj
+         + seq_reads * dm.slow_seq_read_us_per_obj
          + c["slow_writes"] * dm.slow_seq_write_us_per_obj)
     return t / 1e6
-
-
-# ------------------------------------------------------------ workloads
-
-def ycsb_stream(kind: str, n_ops: int, key_space: int, batch: int,
-                zipf: float = 0.99, seed: int = 0):
-    """Yields (op, keys) batches.  A:50/50 B:95/5 C:100/0 D:latest
-    E:scan-ish (modeled as reads) F:read-modify-write."""
-    rng = np.random.default_rng(seed)
-    read_frac = {"A": 0.5, "B": 0.95, "C": 1.0, "D": 0.95, "E": 0.95,
-                 "F": 0.5}[kind]
-    n = 0
-    insert_ptr = key_space // 2
-    while n < n_ops:
-        if zipf > 1.001:
-            keys = (rng.zipf(zipf, batch) - 1) % key_space
-        elif zipf > 0:
-            # zipfian via power-law over ranks (ycsb-style scrambled)
-            u = rng.random(batch)
-            ranks = ((key_space ** (1 - zipf) - 1) * u + 1) \
-                ** (1 / (1 - zipf)) - 1
-            keys = (ranks.astype(np.int64) * 2654435761) % key_space
-        else:
-            keys = rng.integers(0, key_space, batch)
-        keys = keys.astype(np.int32)
-        if kind == "D":   # latest distribution: reads target recent inserts
-            recent = (insert_ptr - (rng.zipf(1.5, batch) - 1)) % key_space
-            keys = recent.astype(np.int32)
-        is_read = rng.random() < read_frac
-        if not is_read and kind == "D":
-            keys = (insert_ptr + np.arange(batch)) % key_space
-            insert_ptr = int(keys[-1]) + 1
-            keys = keys.astype(np.int32)
-        yield ("get" if is_read else "put"), keys
-        n += batch
-
-
-def twitter_stream(cluster: str, n_ops: int, key_space: int, batch: int,
-                   seed: int = 0):
-    """Three representative Twitter mixes (paper §7 / Yang et al.)."""
-    rng = np.random.default_rng(seed)
-    spec = {
-        "cluster39": dict(read_frac=0.06, read_dist="uniform",
-                          write_dist="uniform"),
-        "cluster19": dict(read_frac=0.75, read_dist="zipf",
-                          write_dist="uniform"),
-        "cluster51": dict(read_frac=0.90, read_dist="zipf",
-                          write_dist="zipf"),
-    }[cluster]
-    n = 0
-    while n < n_ops:
-        is_read = rng.random() < spec["read_frac"]
-        dist = spec["read_dist"] if is_read else spec["write_dist"]
-        if dist == "zipf":
-            keys = ((rng.zipf(1.3, batch) - 1) * 2654435761) % key_space
-        else:
-            keys = rng.integers(0, key_space, batch)
-        yield ("get" if is_read else "put"), keys.astype(np.int32)
-        n += batch
 
 
 # -------------------------------------------------------------- variants
@@ -189,51 +137,55 @@ class RunResult:
         c = self.counters
         fast_ratio = c["hits_fast"] / max(c["hits_fast"] + c["hits_slow"], 1)
         disp = self.extra.get("dispatches_per_kop")
-        disp_s = f";dispatches_per_kop={disp:.2f}" if disp is not None else ""
+        disp_s = f";dispatches_per_kop={disp:.3f}" if disp is not None else ""
+        scan_s = (f";scan_objs={c['scan_objs']}"
+                  if c.get("scans", 0) else "")
         return (f"{self.name},{1e6 * self.service_s / max(self.n_ops, 1):.3f},"
                 f"kops={self.kops:.1f};io_s={self.io_s:.3f};"
                 f"cpu_s={self.compact_cpu_s:.3f};"
                 f"slow_write_objs={c['slow_writes']};"
                 f"slow_read_objs={c['slow_reads']};"
                 f"fast_read_ratio={fast_ratio:.3f};"
-                f"compactions={c['compactions']}" + disp_s)
+                f"compactions={c['compactions']}" + scan_s + disp_s)
 
 
-def run_workload(db: PrismDB, stream, name: str, warmup_frac: float = 0.5,
+def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
+                 seed: int = 0, warmup_frac: float = 0.5,
                  fast_write_amp: float = 1.0) -> RunResult:
-    """Run a (op, keys) stream against the facade.
+    """Run a WorkloadSpec or PhaseSchedule against the facade.
 
-    The hot loop issues exactly one jitted dispatch per batch (the fused
-    engine step runs compactions on device); counters are read back only at
-    the warmup boundary and the end.  Compaction scheduling CPU no longer
-    exists as a separate host phase -- it is amortized into the dispatch --
-    so ``compact_cpu_s`` is 0 and service time is the modeled I/O.
-    ``dispatches_per_kop`` reports jitted calls per 1k client ops: the
-    fused control plane's headline metric (was ~1 sync per compaction
-    round + 2 per batch before the refactor).
+    Generation is fused into the engine scan, so the whole run is at
+    most TWO jitted dispatches: an optional warmup segment and the
+    measured segment (counters are read back only at the boundary and
+    the end; ``dispatches_per_kop`` counts the measured segment only).
+    A PhaseSchedule overrides ``n_batches`` with its own length AND
+    defaults to no warmup -- phased scenarios are characterized whole,
+    phase transitions included, not by their tail half (preload is the
+    warmup).  Deterministic for a fixed ``seed``: the stream is
+    device-sampled from one PRNGKey, so every reported counter is
+    bit-reproducible run-to-run.
     """
-    ops = list(stream)
-    n_warm = int(len(ops) * warmup_frac)
+    if isinstance(work, W.PhaseSchedule):
+        n_batches = W.total_batches(work)
+        warmup_frac = 0.0
+    n_warm = int(n_batches * warmup_frac)
+    n_meas = max(n_batches - n_warm, 1)
+    if n_warm:
+        # equal segment lengths share ONE compiled scan (jit_run_schedule
+        # caches on trip count); an odd trailing batch is not worth a
+        # second full XLA compile of the engine step
+        n_warm = n_meas = min(n_warm, n_meas)
+    db.reset_workload(seed=seed)
     t0 = time.time()
-    n_ops = 0
-    base_ctr = None
-    base_disp = 0
-
-    for i, (op, keys) in enumerate(ops):
-        if i == n_warm:
-            base_ctr = db.counters              # one sync at the boundary
-            base_disp = db.dispatches
-        if op == "put":
-            db.put(keys)
-        else:
-            db.get(keys)
-        if i >= n_warm:
-            n_ops += len(keys)
-
+    if n_warm:
+        db.run_workload(work, n_warm, batch)        # dispatch 1: warmup
+    base_ctr = db.counters                          # sync at the boundary
+    base_disp = db.dispatches
+    db.run_workload(work, n_meas, batch)            # dispatch 2: measured
+    jax.block_until_ready(db.estate)
     wall = time.time() - t0
-    ctr = db.counters
-    if base_ctr is not None:
-        ctr = {k: v - base_ctr.get(k, 0) for k, v in ctr.items()}
+    n_ops = n_meas * batch
+    ctr = {k: v - base_ctr.get(k, 0) for k, v in db.counters.items()}
     disp = db.dispatches - base_disp
     io = io_time_s(ctr, fast_write_amp=fast_write_amp)
     extra = {"dispatches_per_kop": 1e3 * disp / max(n_ops, 1)}
@@ -243,7 +195,8 @@ def run_workload(db: PrismDB, stream, name: str, warmup_frac: float = 0.5,
 
 def preload(db: PrismDB, key_space: int, frac: float = 1.0, batch: int = 512,
             seed: int = 1):
-    """Load the dataset (paper: 100M keys preloaded)."""
+    """Load the dataset (paper: 100M keys preloaded).  Deterministic for a
+    fixed seed; setup only, not on the measured path."""
     rng = np.random.default_rng(seed)
     keys = rng.permutation(int(key_space * frac)).astype(np.int32)
     for i in range(0, len(keys), batch):

@@ -1,8 +1,15 @@
-"""One benchmark per paper table/figure (DESIGN.md §6 experiment index).
+"""One benchmark per paper table/figure (DESIGN.md §6 experiment index),
+plus the beyond-paper scenario suite.
 
 Every function returns a list of CSV rows `name,us_per_call,derived`.
 Claims are validated as ratios (the container's absolute Kops/s are not
 the paper's hardware).  Scale knobs keep each figure < ~2 min on 1 CPU.
+
+Workloads come from ``repro.workloads`` (device-resident, fused with the
+engine); every function takes ``seed`` so one ``--seed`` makes the whole
+suite bit-reproducible.  Rows that measure WALL time (not the modeled
+cost) carry ``timing=1`` / ``wall_*`` keys and are excluded from the
+deterministic BENCH_RESULTS.json.
 """
 from __future__ import annotations
 
@@ -11,6 +18,7 @@ import time
 import numpy as np
 
 from benchmarks import harness as H
+from repro import workloads as W
 
 KS = 1 << 14          # key space (paper: 100M; scaled)
 BATCH = 256
@@ -22,25 +30,30 @@ def _cfg(fast_frac=0.125, **kw):
                       **kw)
 
 
+def _workload(kind: str, key_space: int, n_batches: int, zipf: float):
+    if kind.startswith("cluster"):
+        return W.twitter(kind)
+    if kind in W.SCENARIOS:
+        return W.scenario(kind, key_space, n_batches)
+    return W.ycsb(kind, theta=zipf)
+
+
 def _run(variant, workload_kind, n_ops=20000, fast_frac=0.125, zipf=0.99,
          name=None, preload_frac=0.5, cfg=None, seed=0):
     cfg = cfg or _cfg(fast_frac=fast_frac)
     db = H.make_system(variant, cfg, seed=seed)
-    H.preload(db, cfg.key_space, frac=preload_frac)
-    if workload_kind.startswith("cluster"):
-        stream = H.twitter_stream(workload_kind, n_ops, cfg.key_space, BATCH)
-    else:
-        stream = H.ycsb_stream(workload_kind, n_ops, cfg.key_space, BATCH,
-                               zipf=zipf)
+    H.preload(db, cfg.key_space, frac=preload_frac, seed=seed + 1)
+    n_batches = max(n_ops // BATCH, 2)
+    work = _workload(workload_kind, cfg.key_space, n_batches, zipf)
     amp = H.FAST_WRITE_AMP.get(variant, 1.0)
-    r = H.run_workload(db, stream, name or f"{variant}-{workload_kind}",
-                       fast_write_amp=amp)
-    return r
+    return H.run_workload(db, work, name or f"{variant}-{workload_kind}",
+                          n_batches=n_batches, batch=BATCH, seed=seed,
+                          fast_write_amp=amp)
 
 
 # ---------------------------------------------------------------- Table 2
 
-def table2_single_vs_multi_tier(n_ops=40000):
+def table2_single_vs_multi_tier(n_ops=40000, seed=0):
     """Single-tier fast, single-tier slow, het (12.5% fast) x {lsm, prism};
     paper: het-prism > het-lsm > slow-only; fast-only is the ceiling."""
     rows = []
@@ -49,29 +62,28 @@ def table2_single_vs_multi_tier(n_ops=40000):
                             ("tbl2-qlc-only", "lsm", 0.02),
                             ("tbl2-het-lsm", "lsm", 0.125),
                             ("tbl2-het-prism", "prism", 0.125)]:
-        r = _run(variant, "A", n_ops=n_ops, fast_frac=ff, zipf=0.8, name=nm)
+        r = _run(variant, "A", n_ops=n_ops, fast_frac=ff, zipf=0.8, name=nm,
+                 seed=seed)
         rows.append(r.row())
     return rows
 
 
 # ---------------------------------------------------------------- Fig. 6
 
-def fig6_precise_vs_approx(n_ops=40000):
-    """precise-MSC: lowest flash write I/O but long compactions; approx-MSC
-    keeps the I/O with ~RocksDB-level compaction CPU."""
+def fig6_precise_vs_approx(n_ops=40000, seed=0):
+    """precise-MSC vs approx-MSC vs LSM on flash write I/O.  Compaction
+    CPU is amortized into the fused dispatch (no host phase to time);
+    the per-selection CPU claim is measured by ``fig6cpu``."""
     rows = []
     for nm, variant in [("fig6-rocksdb", "lsm"),
                         ("fig6-precise-msc", "prism-precise"),
                         ("fig6-approx-msc", "prism")]:
-        r = _run(variant, "A", n_ops=n_ops, name=nm)
-        n_comp = max(r.counters["compactions"], 1)
-        r.extra["avg_compaction_s"] = r.compact_cpu_s / n_comp
-        rows.append(r.row() + f";avg_compaction_ms="
-                    f"{1e3 * r.extra['avg_compaction_s']:.2f}")
+        r = _run(variant, "A", n_ops=n_ops, name=nm, seed=seed)
+        rows.append(r.row())
     return rows
 
 
-def fig6_scoring_cpu(n_reps=20):
+def fig6_scoring_cpu(n_reps=20, seed=0):
     """The CPU-cost core of Fig. 6 at production-like range sizes: one
     precise-MSC selection walks every object in k=8 candidate ranges
     (tracker probes + index walks); approx-MSC reads 8 x n_buckets bucket
@@ -82,99 +94,130 @@ def fig6_scoring_cpu(n_reps=20):
     ks = 1 << 16
     cfg = H.make_cfg(key_space=ks, fast_frac=0.125, run_size=8192,
                      max_runs=32, tracker_slots=ks // 10, n_buckets=256)
-    db = H.make_system("prism", cfg)
-    H.preload(db, ks, frac=0.6)
+    db = H.make_system("prism", cfg, seed=seed)
+    H.preload(db, ks, frac=0.6, seed=seed + 1)
     state = db.state
     rows = []
     for nm, precise in (("fig6-score-approx", False),
                         ("fig6-score-precise", True)):
         fn = jax.jit(lambda rng: msc.select_range(
             state, cfg, rng, precise=precise)[1])
-        fn(jax.random.PRNGKey(0))                     # compile
+        fn(jax.random.PRNGKey(seed))                  # compile
         t0 = time.time()
         for i in range(n_reps):
-            fn(jax.random.PRNGKey(i)).block_until_ready()
+            fn(jax.random.PRNGKey(seed + i)).block_until_ready()
         us = (time.time() - t0) / n_reps * 1e6
-        rows.append(f"{nm},{us:.1f},per_selection_us={us:.1f}")
+        rows.append(f"{nm},{us:.1f},wall_per_selection_us={us:.1f};timing=1")
     return rows
 
 
 # ---------------------------------------------------------------- Fig. 8
 
-def fig8_het_sweep(n_ops=24000):
+def fig8_het_sweep(n_ops=24000, seed=0):
     """Throughput vs fast-tier share; prism dominates lsm at every point."""
     rows = []
     for ff in (0.05, 0.125, 0.25, 0.5):
         for variant in ("lsm", "prism"):
             r = _run(variant, "A", n_ops=n_ops, fast_frac=ff,
-                     name=f"fig8-{variant}-het{int(ff * 100)}")
+                     name=f"fig8-{variant}-het{int(ff * 100)}", seed=seed)
             rows.append(r.row())
     return rows
 
 
 # ---------------------------------------------------------------- Fig. 9
 
-def fig9_ycsb(n_ops=24000):
-    """YCSB A/B/C/D/F across prism + baselines."""
+def fig9_ycsb(n_ops=24000, seed=0):
+    """Point-query YCSB A/B/C/D/F across prism + baselines (E is range
+    scans -> the ``ycsb`` matrix)."""
     rows = []
     for wk in ("A", "B", "C", "D", "F"):
         for variant in ("prism", "lsm", "ra", "mutant"):
             r = _run(variant, wk, n_ops=n_ops,
-                     name=f"fig9-{variant}-ycsb{wk}")
+                     name=f"fig9-{variant}-ycsb{wk}", seed=seed)
             rows.append(r.row())
+    return rows
+
+
+# --------------------------------------------------- YCSB A-F matrix
+
+def ycsb_matrix(n_ops=16000, seed=0):
+    """The full YCSB A-F suite on prism via the device workload engine --
+    E drives the real sorted-index range-scan path."""
+    rows = []
+    for wk in W.YCSB_KINDS:
+        r = _run("prism", wk, n_ops=n_ops, name=f"ycsb-{wk}", seed=seed)
+        rows.append(r.row())
+    return rows
+
+
+# ------------------------------------------------- beyond-paper scenarios
+
+def scenarios(n_ops=16000, seed=0):
+    """Phased scenarios (hot-set shift, diurnal, flash crowd, scan burst,
+    delete churn): each whole multi-phase segment runs as one fused
+    generate+execute dispatch."""
+    rows = []
+    for sc in W.SCENARIOS:
+        r = _run("prism", sc, n_ops=n_ops, name=f"scenario-{sc}", seed=seed)
+        rows.append(r.row())
     return rows
 
 
 # --------------------------------------------------------------- Fig. 10
 
-def fig10_zipf_sweep(n_ops=20000):
+def fig10_zipf_sweep(n_ops=20000, seed=0):
     rows = []
     for z in (0.6, 0.8, 0.99, 1.2, 0.0):       # 0.0 = uniform
         for variant in ("prism", "lsm"):
             nm = f"fig10-{variant}-zipf{z if z else 'U'}"
-            r = _run(variant, "A", n_ops=n_ops, zipf=z, name=nm)
+            r = _run(variant, "A", n_ops=n_ops, zipf=z, name=nm, seed=seed)
             rows.append(r.row())
     return rows
 
 
 # -------------------------------------------------------------- Fig. 11b
 
-def fig11b_promotions(n_ops=40000):
+def fig11b_promotions(n_ops=40000, seed=0):
     """Read-only YCSB-C: promotions lift the fast-tier read ratio."""
     rows = []
     for nm, variant in [("fig11b-no-promote", "prism-noprom"),
                         ("fig11b-promote", "prism")]:
-        r = _run(variant, "C", n_ops=n_ops, name=nm)
+        r = _run(variant, "C", n_ops=n_ops, name=nm, seed=seed)
         rows.append(r.row())
     return rows
 
 
 # -------------------------------------------------------------- Fig. 11c
 
-def fig11c_pinning_threshold(n_ops=20000):
+def fig11c_pinning_threshold(n_ops=20000, seed=0):
     """Per-workload optimum of the pinning threshold."""
     rows = []
     for wk in ("A", "B"):
         for thresh in (0.1, 0.4, 0.7, 0.9):
             cfg = _cfg(pin_threshold=thresh)
             r = _run("prism", wk, n_ops=n_ops, cfg=cfg,
-                     name=f"fig11c-ycsb{wk}-pin{int(thresh * 100)}")
+                     name=f"fig11c-ycsb{wk}-pin{int(thresh * 100)}",
+                     seed=seed)
             rows.append(r.row())
     return rows
 
 
 # -------------------------------------------------------------- Fig. 11d
 
-def fig11d_partitions(n_ops=8000):
-    """Shared-nothing partition scaling (vmap over partitions)."""
+def fig11d_partitions(n_ops=8000, seed=0):
+    """Shared-nothing partition scaling (vmap over partitions) on the
+    ROUTED client path: a fixed total op stream is hash-scattered across
+    partitions, exercising route_batch and the drop accounting (the
+    device-generated per-tenant path is covered by the workload tests
+    and `scenarios`)."""
     from repro.core.db import PartitionedDB
     rows = []
     for p in (1, 2, 4, 8):
         cfg = H.make_cfg(key_space=KS // p, fast_frac=0.125, run_size=256,
                          max_runs=64, tracker_slots=max(KS // p // 5, 64),
                          n_buckets=32)
-        db = PartitionedDB(cfg, n_partitions=p)
-        rng = np.random.default_rng(0)
+        db = PartitionedDB(cfg, n_partitions=p, seed=seed)
+        rng = np.random.default_rng(seed)
         t0 = time.time()
         n = 0
         for _ in range(n_ops // BATCH):
@@ -183,30 +226,32 @@ def fig11d_partitions(n_ops=8000):
         wall = time.time() - t0
         rows.append(f"fig11d-partitions{p},{1e6 * wall / n:.3f},"
                     f"wall_kops={n / wall / 1e3:.1f};"
-                    f"dispatches_per_kop={1e3 * db.dispatches / n:.2f};"
-                    f"dropped={db.dropped}")
+                    f"dispatches_per_kop={1e3 * db.dispatches / n:.3f};"
+                    f"dropped={db.dropped};timing=1")
     return rows
 
 
 # --------------------------------------------------------------- Table 5
 
-def table5_twitter(n_ops=24000):
+def table5_twitter(n_ops=24000, seed=0):
     rows = []
-    for cl in ("cluster39", "cluster19", "cluster51"):
+    for cl in W.TWITTER_CLUSTERS:
         for variant in ("prism", "lsm"):
-            r = _run(variant, cl, n_ops=n_ops, name=f"tbl5-{variant}-{cl}")
+            r = _run(variant, cl, n_ops=n_ops, name=f"tbl5-{variant}-{cl}",
+                     seed=seed)
             rows.append(r.row())
     return rows
 
 
 # --------------------------------------------------------------- Fig. 12
 
-def fig12_power_of_k(n_ops=24000):
+def fig12_power_of_k(n_ops=24000, seed=0):
     """Range-selection sweep: k=1 (random) .. 32, + exhaustive-ish."""
     rows = []
     for k in (1, 2, 8, 32):
         cfg = _cfg(power_k=k)
-        r = _run("prism", "A", n_ops=n_ops, cfg=cfg, name=f"fig12-k{k}")
+        r = _run("prism", "A", n_ops=n_ops, cfg=cfg, name=f"fig12-k{k}",
+                 seed=seed)
         rows.append(r.row())
     return rows
 
@@ -217,6 +262,8 @@ ALL = {
     "fig6cpu": fig6_scoring_cpu,
     "fig8": fig8_het_sweep,
     "fig9": fig9_ycsb,
+    "ycsb": ycsb_matrix,
+    "scenarios": scenarios,
     "fig10": fig10_zipf_sweep,
     "fig11b": fig11b_promotions,
     "fig11c": fig11c_pinning_threshold,

@@ -1,11 +1,19 @@
 """Benchmark runner: one function per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig9] [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,ycsb] [--quick]
+                                          [--seed N]
 
 Prints ``name,us_per_call,derived`` CSV rows and a paper-claims validation
 summary (ratios, not absolute Kops -- see DESIGN.md §6), and writes the
 parsed metrics (including ``dispatches_per_kop``, the fused engine step's
 headline metric) to ``BENCH_RESULTS.json``.
+
+One ``--seed`` threads a single PRNG seed through every benchmark
+(device-sampled workloads, preload permutations), so the JSON is
+bit-reproducible run-to-run: rows that measure wall time are marked
+``timing=1`` and their wall-clock fields (``us_per_call``, ``wall_*``)
+are excluded from the JSON (they still print and feed validation).
+The seed is recorded under ``_meta``.
 """
 from __future__ import annotations
 
@@ -21,6 +29,8 @@ def main(argv=None) -> None:
                     help="comma-separated benchmark names")
     ap.add_argument("--quick", action="store_true",
                     help="fewer ops per benchmark")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed threaded through every benchmark")
     ap.add_argument("--json", default="BENCH_RESULTS.json",
                     help="output json path ('' disables)")
     args = ap.parse_args(argv)
@@ -32,7 +42,7 @@ def main(argv=None) -> None:
     for nm in names:
         fn = P.ALL[nm]
         t0 = time.time()
-        kw = {}
+        kw = {"seed": args.seed}
         if args.quick:
             import inspect
             sig = inspect.signature(fn)
@@ -45,18 +55,27 @@ def main(argv=None) -> None:
             rows.append(row)
         print(f"# {nm} done in {time.time() - t0:.1f}s", file=sys.stderr)
     if args.json:
+        parsed = _parse(rows, deterministic=True)
+        parsed["_meta"] = {"seed": args.seed}
         with open(args.json, "w") as f:
-            json.dump(_parse(rows), f, indent=1, sort_keys=True)
+            json.dump(parsed, f, indent=1, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
     _validate(rows)
 
 
-def _parse(rows):
+def _parse(rows, deterministic=False):
+    """Rows -> {name: {metric: value}}.  ``deterministic=True`` drops
+    wall-clock metrics (``wall_*`` keys; ``us_per_call`` of rows marked
+    ``timing=1``) so the result is bit-stable for a fixed seed."""
     out = {}
     for r in rows:
         name, us, derived = r.split(",", 2)
         d = dict(kv.split("=") for kv in derived.split(";") if "=" in kv)
-        d["us_per_call"] = float(us)
+        timing = d.pop("timing", None) is not None
+        if not (deterministic and timing):
+            d["us_per_call"] = us
+        if deterministic:
+            d = {k: v for k, v in d.items() if not k.startswith("wall_")}
         out[name] = {k: float(v) for k, v in d.items()}
     return out
 
@@ -92,8 +111,8 @@ def _validate(rows):
                   f"approx={ap_['kops']:.1f} precise={pr['kops']:.1f} kops")
 
     if "fig6-score-precise" in d:
-        sp = d["fig6-score-precise"]["per_selection_us"]
-        sa = d["fig6-score-approx"]["per_selection_us"]
+        sp = d["fig6-score-precise"]["wall_per_selection_us"]
+        sa = d["fig6-score-approx"]["wall_per_selection_us"]
         claim("fig6cpu: approx-MSC selection CPU << precise (paper ~15x)",
               sa < sp / 4,
               f"approx={sa:.0f}us precise={sp:.0f}us ratio={sp / sa:.1f}x")
@@ -150,6 +169,20 @@ def _validate(rows):
                            for v in ("lsm", "ra", "mutant")))
         claim("fig9: prism wins point-query workloads vs all baselines",
               wins >= 4, f"prism best on {wins}/5 workloads")
+
+    ycsb = {k: v for k, v in d.items() if k.startswith("ycsb-")}
+    if len(ycsb) >= 6:
+        claim("ycsb: all six core workloads ran on the device engine "
+              "(E = real range scans)",
+              ycsb.get("ycsb-E", {}).get("scan_objs", 0) > 0,
+              f"E scan_objs={ycsb.get('ycsb-E', {}).get('scan_objs', 0):.0f}")
+
+    sc = {k: v for k, v in d.items() if k.startswith("scenario-")}
+    if sc:
+        worst = max(v["dispatches_per_kop"] for v in sc.values())
+        claim("scenarios: fused generate+execute keeps dispatches/kop "
+              "below PR 1's per-batch stepping (3.91)",
+              worst < 3.91, f"worst dispatches_per_kop={worst:.3f}")
 
 
 if __name__ == "__main__":

@@ -99,12 +99,44 @@ class PrismDB:
     def scan(self, lo: int, n: int):
         return tiers.scan(self.estate.tier, jnp.int32(lo), n)
 
+    def scan_ops(self, starts, lens, valid=None):
+        """Batched bounded range scans through the fused engine step
+        (YCSB-E path).  Returns per-lane live-key counts."""
+        res = self._dispatch(engine.make_op(
+            engine.SCAN, starts, valid=valid, aux=lens,
+            value_width=self.cfg.value_width))
+        return res.src
+
     def run_ops(self, ops: OpBatch):
         """Drive a stacked op stream (leading axis = batches) in ONE
         dispatch via ``lax.scan``; returns stacked OpResults."""
         self.estate, res = self._run(self.estate, ops)
         self.dispatches += 1
         return res
+
+    # -- device-resident workloads ----------------------------------------
+    def reset_workload(self, seed: int = 0) -> None:
+        """(Re)start the workload stream: generator state + its rng."""
+        from repro import workloads
+        self._gen = workloads.init_gen(self.cfg.key_space)
+        self._wrng = jax.random.PRNGKey(seed)
+        self._wt = 0
+
+    def run_workload(self, work, n_batches: int, batch: int):
+        """Run ``n_batches`` steps of a WorkloadSpec / PhaseSchedule with
+        generation fused into the engine scan: ONE dispatch for the whole
+        segment.  Successive calls continue the same stream/timeline
+        (``reset_workload`` restarts it); returns stacked StepStats."""
+        from repro import workloads
+        if getattr(self, "_gen", None) is None:
+            self.reset_workload()
+        sched = workloads.as_schedule(work, n_batches)
+        fn = workloads.jit_run_schedule(self.ecfg, n_batches, batch)
+        self.estate, self._gen, self._wrng, stats = fn(
+            self.estate, self._gen, self._wrng, sched, t0=self._wt)
+        self._wt += n_batches
+        self.dispatches += 1
+        return stats
 
     # -- introspection -------------------------------------------------------
     @property
@@ -152,9 +184,10 @@ def _partitioned_step(estate, keys, kind: int, cfg: EngineConfig, p: int,
     vals = jnp.broadcast_to(
         routed[..., None].astype(jnp.float32),
         (*routed.shape, cfg.tier.value_width))
-    op = OpBatch(kind=jnp.int32(kind), keys=routed, vals=vals, valid=valid)
+    op = OpBatch(kind=jnp.int32(kind), keys=routed, vals=vals, valid=valid,
+                 aux=jnp.zeros_like(routed))
     step = functools.partial(engine.engine_step, cfg=cfg)
-    estate, res = jax.vmap(step, in_axes=(0, OpBatch(None, 0, 0, 0)))(
+    estate, res = jax.vmap(step, in_axes=(0, OpBatch(None, 0, 0, 0, 0)))(
         estate, op)
     return estate, res, dropped
 
@@ -210,6 +243,41 @@ class PartitionedDB:
     def get(self, keys):
         res = self._dispatch(keys, engine.GET)
         return res.vals, res.found, res.src
+
+    # -- device-resident multi-tenant workloads ---------------------------
+    def reset_workload(self, seed: int = 0) -> None:
+        from repro import workloads
+        self._gen = jax.vmap(lambda _: workloads.init_gen(
+            self.cfg.key_space))(jnp.arange(self.p))
+        self._wrng = jax.random.split(jax.random.PRNGKey(seed), self.p)
+        self._wt = 0
+
+    def run_workload(self, works, n_batches: int, batch: int):
+        """Multi-tenant mixes: tenant i (= partition i) runs its own
+        WorkloadSpec / PhaseSchedule over its own key slice, all tenants
+        vmapped under ONE dispatch.  ``works`` is one workload shared by
+        every tenant or a length-P sequence (phase counts must match, the
+        vmap axis is stacked).  Returns StepStats with a leading tenant
+        axis."""
+        from repro import workloads
+        if getattr(self, "_gen", None) is None:
+            self.reset_workload()
+        if isinstance(works, (workloads.WorkloadSpec,
+                              workloads.PhaseSchedule)):
+            works = [works] * self.p        # specs are NamedTuples: test
+        works = list(works)                 # identity before sequence-ness
+        assert len(works) == self.p, (len(works), self.p)
+        scheds = [workloads.as_schedule(w, n_batches) for w in works]
+        counts = [workloads.n_phases(s) for s in scheds]
+        assert len(set(counts)) == 1, \
+            f"tenant schedules must have equal phase counts, got {counts}"
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *scheds)
+        fn = workloads.jit_run_tenants(self.ecfg, n_batches, batch)
+        self.estate, self._gen, self._wrng, stats = fn(
+            self.estate, self._gen, self._wrng, stacked, t0=self._wt)
+        self._wt += n_batches
+        self.dispatches += 1
+        return stats
 
     @property
     def counters(self) -> dict:

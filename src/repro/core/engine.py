@@ -41,7 +41,7 @@ from jax import lax
 from repro.core import compaction, policy, tiers
 from repro.core.tiers import TierConfig, TierState
 
-PUT, GET, DELETE = 0, 1, 2
+PUT, GET, DELETE, SCAN = 0, 1, 2, 3
 
 MirrorFn = Callable[[Any, compaction.Movement], Any]
 
@@ -55,6 +55,7 @@ class EngineConfig(NamedTuple):
     selection: str = "msc"
     pin_mode: str = "object"
     append_only: bool = False
+    scan_chunk: int = 32        # index-window entries per tier per scan lane
     max_rounds: int = 256       # compaction-round bound per engine step
                                 # (matches the old host rate-limit loop; the
                                 # while_loop body is traced once regardless)
@@ -71,17 +72,20 @@ class EngineState(NamedTuple):
 
 class OpBatch(NamedTuple):
     """One client batch.  ``kind`` is a traced scalar so an op stream can be
-    stacked and scanned; ``vals`` is ignored by get/delete."""
-    kind: jax.Array             # i32 scalar: PUT / GET / DELETE
-    keys: jax.Array             # i32[B]
+    stacked and scanned; ``vals`` is ignored by get/delete/scan; ``aux`` is
+    the per-lane range length for scan, ignored otherwise."""
+    kind: jax.Array             # i32 scalar: PUT / GET / DELETE / SCAN
+    keys: jax.Array             # i32[B] (scan: range start keys)
     vals: jax.Array             # f32[B, V]
     valid: jax.Array            # bool[B]
+    aux: jax.Array              # i32[B] (scan: requested range length)
 
 
 class OpResult(NamedTuple):
     vals: jax.Array             # f32[B, V] (zeros unless get)
     found: jax.Array            # bool[B]
-    src: jax.Array              # i32[B]: 0=fast 1=slow -1=miss/other
+    src: jax.Array              # i32[B]: get 0=fast 1=slow -1=miss;
+                                #         scan: live keys returned
 
 
 def dealias(tree):
@@ -101,7 +105,7 @@ def init(cfg: EngineConfig, rng: jax.Array, payload: Any = (),
 
 
 def make_op(kind: int, keys: jax.Array, vals: jax.Array | None = None,
-            valid: jax.Array | None = None, *,
+            valid: jax.Array | None = None, aux: jax.Array | None = None, *,
             value_width: int) -> OpBatch:
     """Build an OpBatch with the facade defaults (value = broadcast key)."""
     keys = jnp.asarray(keys, jnp.int32)
@@ -110,8 +114,11 @@ def make_op(kind: int, keys: jax.Array, vals: jax.Array | None = None,
                                 (keys.shape[0], value_width))
     if valid is None:
         valid = jnp.ones(keys.shape, bool)
+    if aux is None:
+        aux = jnp.zeros(keys.shape, jnp.int32)
     return OpBatch(kind=jnp.int32(kind), keys=keys,
-                   vals=jnp.asarray(vals, jnp.float32), valid=valid)
+                   vals=jnp.asarray(vals, jnp.float32), valid=valid,
+                   aux=jnp.asarray(aux, jnp.int32))
 
 
 # ------------------------------------------------------------ compaction
@@ -177,7 +184,8 @@ def read_policy(state: EngineState, cfg: EngineConfig, *,
                 mirror: MirrorFn | None = None,
                 force_pin_keys: jax.Array | None = None) -> EngineState:
     """§5.3 read-triggered policy step + its per-step compaction budget."""
-    total = state.tier.ctr.gets + state.tier.ctr.puts
+    total = (state.tier.ctr.gets + state.tier.ctr.puts
+             + state.tier.ctr.scans)
     pol, go = policy.step(state.pol, state.tier, cfg.pol, total_ops=total)
     state = state._replace(pol=pol)
 
@@ -202,6 +210,7 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
               watermark compactions
     get    -> lookup, §5.3 policy step (+ its compactions)
     delete -> tombstone/free
+    scan   -> bounded sorted-index range scan (reads: policy step too)
     """
     b, v = op.vals.shape
     empty = OpResult(vals=jnp.zeros((b, v), jnp.float32),
@@ -237,7 +246,15 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
         tier = tiers.delete_batch(s.tier, cfg.tier, op.keys, op.valid)
         return s._replace(tier=tier), empty
 
-    return lax.switch(op.kind, [do_put, do_get, do_delete], state)
+    def do_scan(s: EngineState):
+        lens = jnp.minimum(op.aux, cfg.scan_chunk)
+        tier, n_live = tiers.scan_batch(s.tier, cfg.tier, op.keys, lens,
+                                        op.valid, chunk=cfg.scan_chunk)
+        s = read_policy(s._replace(tier=tier), cfg, mirror=mirror,
+                        force_pin_keys=force_pin_keys)
+        return s, OpResult(vals=empty.vals, found=n_live > 0, src=n_live)
+
+    return lax.switch(op.kind, [do_put, do_get, do_delete, do_scan], state)
 
 
 def run_ops(state: EngineState, ops: OpBatch, cfg: EngineConfig, *,

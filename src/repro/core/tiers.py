@@ -62,6 +62,9 @@ class Counters(NamedTuple):
     bloom_probes: jax.Array
     bloom_fps: jax.Array
     comp_reads: jax.Array      # slow reads issued by compactions (sequential)
+    scans: jax.Array           # range-scan lanes served
+    scan_objs: jax.Array       # objects returned by scans (either tier)
+    scan_reads: jax.Array      # slow reads issued by scans (sequential)
     compactions: jax.Array
     demoted: jax.Array
     promoted: jax.Array
@@ -292,24 +295,72 @@ def delete_batch(state: TierState, cfg: TierConfig, keys: jax.Array,
                           bucket_fast=bucket_fast)
 
 
-def scan(state: TierState, lo: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
-    """Return up to ``n`` live keys >= lo in sorted order, merged across tiers
-    (fast version supersedes slow; tombstones suppress)."""
+def _scan_windows(state: TierState, lo: jax.Array, take: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """The merged-scan core shared by ``scan`` and ``scan_batch``: the
+    next ``take`` index entries >= ``lo`` from each tier, with tombstoned
+    fast entries and fast-shadowed slow entries masked to PADKEY."""
+    ar = jnp.arange(take)
     fstart = jnp.searchsorted(state.fidx_keys, lo)
     sstart = jnp.searchsorted(state.sidx_keys, lo)
-    take = n  # over-fetch n from each tier, merge, take first n live
-    fpos = jnp.clip(fstart + jnp.arange(take), 0, state.fidx_keys.shape[0] - 1)
-    spos = jnp.clip(sstart + jnp.arange(take), 0, state.sidx_keys.shape[0] - 1)
-    fk = jnp.where(fstart + jnp.arange(take) < state.fidx_keys.shape[0],
+    fpos = jnp.clip(fstart + ar, 0, state.fidx_keys.shape[0] - 1)
+    spos = jnp.clip(sstart + ar, 0, state.sidx_keys.shape[0] - 1)
+    fk = jnp.where(fstart + ar < state.fidx_keys.shape[0],
                    state.fidx_keys[fpos], PADKEY)
-    sk = jnp.where(sstart + jnp.arange(take) < state.sidx_keys.shape[0],
+    sk = jnp.where(sstart + ar < state.sidx_keys.shape[0],
                    state.sidx_keys[spos], PADKEY)
-    fslots = state.fidx_slots[fpos]
-    tomb = state.fast_ver[jnp.clip(fslots, 0)] < 0
+    tomb = state.fast_ver[jnp.clip(state.fidx_slots[fpos], 0)] < 0
     fk = jnp.where(tomb, PADKEY, fk)
     # drop slow keys shadowed by fast copies (incl. tombstones)
     _, shadowed = sorted_lookup(state.fidx_keys, state.fidx_slots, sk)
     sk = jnp.where(shadowed, PADKEY, sk)
+    return fk, sk
+
+
+def scan(state: TierState, lo: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """Return up to ``n`` live keys >= lo in sorted order, merged across tiers
+    (fast version supersedes slow; tombstones suppress)."""
+    fk, sk = _scan_windows(state, lo, n)   # over-fetch n per tier, merge
     allk = jnp.sort(jnp.concatenate([fk, sk]))
     keys = allk[:n]
     return keys, keys != PADKEY
+
+
+def scan_batch(state: TierState, cfg: TierConfig, starts: jax.Array,
+               lens: jax.Array, valid: jax.Array, *, chunk: int
+               ) -> tuple[TierState, jax.Array]:
+    """Batched bounded range scans (YCSB-E) over the merged sorted indexes.
+
+    Per lane: up to ``lens[b]`` live keys >= ``starts[b]`` in sorted order,
+    window-bounded by ``chunk`` index entries per tier.  Returns
+    ``(state', n_live)`` where ``n_live[b]`` counts the keys the scan
+    returned (also totaled in ``scan_objs``).  I/O accounting: every
+    returned object is charged a read on its tier; slow-tier scan reads
+    are sequential (runs are key-sorted), so they also land in
+    ``scan_reads`` for the cost model.
+    """
+
+    def one(lo, ln):
+        fk, sk = _scan_windows(state, lo, chunk)
+        keys = jnp.concatenate([fk, sk])
+        from_slow = jnp.concatenate([jnp.zeros(chunk, bool),
+                                     jnp.ones(chunk, bool)])
+        order = jnp.argsort(keys)
+        keys, from_slow = keys[order], from_slow[order]
+        live = keys != PADKEY
+        sel = live & (jnp.cumsum(live.astype(jnp.int32)) <= ln)
+        return (jnp.sum(sel.astype(jnp.int32)),
+                jnp.sum((sel & ~from_slow).astype(jnp.int32)),
+                jnp.sum((sel & from_slow).astype(jnp.int32)))
+
+    ln = jnp.where(valid, jnp.maximum(lens, 0), 0)
+    n_live, n_fast, n_slow = jax.vmap(one)(starts, ln)
+    nfr, nsr = jnp.sum(n_fast), jnp.sum(n_slow)
+    ctr = state.ctr._replace(
+        scans=state.ctr.scans + jnp.sum(valid.astype(jnp.int32)),
+        scan_objs=state.ctr.scan_objs + nfr + nsr,
+        fast_reads=state.ctr.fast_reads + nfr,
+        slow_reads=state.ctr.slow_reads + nsr,
+        scan_reads=state.ctr.scan_reads + nsr,
+    )
+    return state._replace(ctr=ctr), n_live

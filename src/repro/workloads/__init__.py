@@ -1,0 +1,25 @@
+"""Device-resident workload engine (paper §7's evaluation driver).
+
+Layers:
+  spec       -- WorkloadSpec / GenState: traced op-mix + key-dist params
+  sampler    -- jax.random samplers (bounded zipf, uniform, latest, seq)
+                and ``sample_ops`` (stacked streams for ``run_ops``)
+  schedule   -- PhaseSchedule: piecewise spec composition
+  runner     -- generation fused with ``engine_step`` under one lax.scan;
+                vmapped multi-tenant execution
+  trace      -- host-trace pack/unpack into the stacked stream format
+  specs      -- canned YCSB A-F, Twitter clusters, phased scenarios
+  reference  -- corrected numpy mirrors + analytic pmfs (for tests)
+"""
+from repro.workloads.spec import (GenState, WorkloadSpec,  # noqa: F401
+                                  init_gen, spec)
+from repro.workloads.sampler import sample_batch, sample_ops  # noqa: F401
+from repro.workloads.schedule import (PhaseSchedule,  # noqa: F401
+                                      as_schedule, n_phases, schedule,
+                                      spec_at, total_batches)
+from repro.workloads.runner import (StepStats, jit_run_schedule,  # noqa: F401
+                                    jit_run_tenants, run_schedule,
+                                    run_tenants)
+from repro.workloads.trace import pack_trace, unpack_trace  # noqa: F401
+from repro.workloads.specs import (SCENARIOS, TWITTER_CLUSTERS,  # noqa: F401
+                                   YCSB_KINDS, scenario, twitter, ycsb)

@@ -1,0 +1,99 @@
+"""Fused workload execution: generation + engine step under one scan.
+
+``run_schedule`` interleaves ``sample_batch`` with ``engine.engine_step``
+inside a single ``lax.scan``, so a whole workload segment -- sampling,
+data ops, rate limiting, watermark compactions, the §5.3 read policy --
+is ONE jitted dispatch.  ``run_tenants`` vmaps it across a stacked
+EngineState (PartitionedDB shards) with per-tenant schedules for
+multi-tenant mixes.
+
+Per-step outputs are compact aggregates (``StepStats``), not the full
+value tensors, so T-batch segments don't materialize T*B*V floats.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import engine
+from repro.workloads.sampler import sample_batch
+from repro.workloads.schedule import PhaseSchedule, spec_at
+from repro.workloads.spec import GenState
+
+
+class StepStats(NamedTuple):
+    """Per-batch aggregates stacked over the segment."""
+    kind: jax.Array         # i32[T]: op kind executed
+    found: jax.Array        # i32[T]: found lanes (get) / non-empty scans
+    fast: jax.Array         # i32[T]: lanes served from the fast tier
+    returned: jax.Array     # i32[T]: scan keys returned
+
+
+def run_schedule(estate: engine.EngineState, gst: GenState, rng: jax.Array,
+                 sched: PhaseSchedule, cfg: engine.EngineConfig, *,
+                 n_batches: int, batch: int,
+                 t0: jax.Array | int = 0
+                 ) -> tuple[engine.EngineState, GenState, jax.Array,
+                            StepStats]:
+    """Run ``n_batches`` schedule steps starting at step index ``t0``.
+
+    ``t0`` lets a caller split one schedule across dispatches (warmup /
+    measurement) while staying on the same phase timeline; ``gst`` and
+    ``rng`` thread through so the stream continues exactly where the
+    previous segment stopped.
+    """
+    ks = cfg.tier.key_space
+
+    def step(carry, t):
+        est, g, r = carry
+        r, k = jax.random.split(r)
+        g, op = sample_batch(k, spec_at(sched, t), g, batch=batch,
+                             key_space=ks,
+                             value_width=cfg.tier.value_width)
+        est, res = engine.engine_step(est, op, cfg)
+        st = StepStats(
+            kind=op.kind,
+            found=jnp.sum(res.found.astype(jnp.int32)),
+            fast=jnp.sum((res.src == 0).astype(jnp.int32)
+                         & (op.kind == engine.GET).astype(jnp.int32)),
+            returned=jnp.where(op.kind == engine.SCAN,
+                               jnp.sum(res.src), 0))
+        return (est, g, r), st
+
+    steps = jnp.int32(t0) + jnp.arange(n_batches, dtype=jnp.int32)
+    (estate, gst, rng), stats = lax.scan(step, (estate, gst, rng), steps)
+    return estate, gst, rng, stats
+
+
+@functools.lru_cache(maxsize=256)
+def jit_run_schedule(cfg: engine.EngineConfig, n_batches: int, batch: int,
+                     donate: bool = True):
+    """Jitted ``run_schedule`` with the engine state donated; cached per
+    (config, segment shape) so facades sharing a config share compiles."""
+    fn = functools.partial(run_schedule, cfg=cfg, n_batches=n_batches,
+                           batch=batch)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def run_tenants(estates: engine.EngineState, gsts: GenState,
+                rngs: jax.Array, scheds: PhaseSchedule,
+                cfg: engine.EngineConfig, *, n_batches: int, batch: int,
+                t0: jax.Array | int = 0):
+    """vmap ``run_schedule`` across tenants: every input carries a leading
+    tenant axis (stacked EngineStates from ``PartitionedDB``, stacked
+    per-tenant schedules).  One dispatch drives all tenants' segments."""
+    fn = functools.partial(run_schedule, cfg=cfg, n_batches=n_batches,
+                           batch=batch, t0=t0)
+    return jax.vmap(fn)(estates, gsts, rngs, scheds)
+
+
+@functools.lru_cache(maxsize=256)
+def jit_run_tenants(cfg: engine.EngineConfig, n_batches: int, batch: int,
+                    donate: bool = True):
+    fn = functools.partial(run_tenants, cfg=cfg, n_batches=n_batches,
+                           batch=batch)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,52 @@
+"""PhaseSchedule: piecewise composition of WorkloadSpecs.
+
+A schedule is the stacked spec pytree plus cumulative batch boundaries.
+``spec_at(sched, t)`` selects the phase for scan step ``t`` with a
+dynamic leading-axis index, so a whole multi-phase workload (hot-set
+shift, diurnal swing, flash crowd, ...) generates AND executes under one
+``lax.scan`` dispatch, and vmaps across tenants/partitions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.workloads.spec import WorkloadSpec
+
+
+class PhaseSchedule(NamedTuple):
+    specs: WorkloadSpec     # stacked: every leaf has leading axis P
+    bounds: jax.Array       # i32[P]: cumulative batch count per phase end
+
+
+def schedule(phases: Sequence[tuple[WorkloadSpec, int]]) -> PhaseSchedule:
+    """Compose ``[(spec, n_batches), ...]`` into one schedule."""
+    specs = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[sp for sp, _ in phases])
+    bounds = jnp.cumsum(jnp.asarray([n for _, n in phases], jnp.int32))
+    return PhaseSchedule(specs=specs, bounds=bounds)
+
+
+def as_schedule(work, n_batches: int) -> PhaseSchedule:
+    """A bare spec becomes a single-phase schedule of ``n_batches``."""
+    if isinstance(work, PhaseSchedule):
+        return work
+    return schedule([(work, n_batches)])
+
+
+def total_batches(sched: PhaseSchedule) -> int:
+    return int(sched.bounds[-1])
+
+
+def n_phases(sched: PhaseSchedule) -> int:
+    return sched.bounds.shape[0]
+
+
+def spec_at(sched: PhaseSchedule, t: jax.Array) -> WorkloadSpec:
+    """Spec governing scan step ``t`` (steps past the end keep the last
+    phase -- boundaries are end-exclusive)."""
+    idx = jnp.searchsorted(sched.bounds, t, side="right")
+    idx = jnp.clip(idx, 0, sched.bounds.shape[0] - 1)
+    return jax.tree.map(lambda x: x[idx], sched.specs)
