@@ -91,8 +91,16 @@ def make_cfg(key_space=1 << 15, fast_frac=0.125, **kw) -> TierConfig:
 
 def make_system(variant: str, cfg: TierConfig, seed: int = 0) -> PrismDB:
     """Paper baselines (§7): prism / prism-precise / lsm / ra / mutant."""
-    pol = policy.PolicyConfig(epoch_ops=4096, cooldown_ops=16384,
-                              read_heavy_frac=0.8, slow_tracked_frac=0.3)
+    # detect_ops: the §5.3 DETECT rate window.  Must be a few batches, not
+    # the full epoch, so read-heavy phases register within a --quick
+    # segment (the window slides past preload/write phases; see policy.py).
+    # epoch_ops is equally short so the MONITOR stage can END an
+    # unprofitable ACTIVE epoch within a segment: promotions that don't
+    # lift the fast-read ratio (mixed/churny phases) cool down after one
+    # epoch instead of compacting for the rest of the run.
+    pol = policy.PolicyConfig(epoch_ops=1024, cooldown_ops=16384,
+                              read_heavy_frac=0.8, slow_tracked_frac=0.3,
+                              detect_ops=1024)
     if variant == "prism":
         return PrismDB(cfg, seed=seed, pol_cfg=pol)
     if variant == "prism-noprom":
@@ -146,7 +154,9 @@ class RunResult:
                 f"slow_write_objs={c['slow_writes']};"
                 f"slow_read_objs={c['slow_reads']};"
                 f"fast_read_ratio={fast_ratio:.3f};"
-                f"compactions={c['compactions']}" + scan_s + disp_s)
+                f"compactions={c['compactions']};"
+                f"consolidations={c.get('consolidations', 0)}"
+                + scan_s + disp_s)
 
 
 def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,

@@ -243,6 +243,71 @@ def table5_twitter(n_ops=24000, seed=0):
     return rows
 
 
+# ----------------------------------------------- index maintenance cost
+
+def index_maintenance(n_ops=4096, seed=0):
+    """Put-path cost vs slow-pool size.  Historically every put batch
+    re-argsorted the full fast pool AND paid an O(slow_slots) pass-through
+    copy per ``lax.switch`` branch, so the same put stream got slower as
+    the SLOW pool grew.  With incremental index maintenance + the
+    branchless step, wall time per batch must be pool-size independent
+    (``index`` claim) and a fused stream is ONE dispatch.
+
+    Rows: ``index-put-*`` = per-batch stepping (the 15.625 dispatches/kop
+    anchor), ``index-fused-*`` = the same stream under ``run_ops``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+    batch = 64
+    n_batches = max(n_ops // batch, 4)
+    rows = []
+    for nm, ns_pow in (("ns17", 17), ("ns20", 20)):
+        # the put stream fits the fast tier: no compactions, so the rows
+        # isolate the put path itself (compaction cost is legitimately
+        # O(pool) in this dense representation and measured elsewhere)
+        cfg = H.make_cfg(key_space=1 << 13, fast_frac=1.0,
+                         slow_slots=1 << ns_pow, run_size=512, max_runs=64,
+                         tracker_slots=512, n_buckets=64)
+        rng = np.random.default_rng(seed)
+        keys = rng.integers(0, cfg.key_space,
+                            size=(n_batches, batch)).astype(np.int32)
+
+        # per-batch stepping: one dispatch per put batch
+        db = H.make_system("prism", cfg, seed=seed)
+        db.put(keys[0])                                   # compile
+        t0 = time.time()
+        for i in range(1, n_batches):
+            db.put(keys[i])
+        jax.block_until_ready(db.estate)
+        us = (time.time() - t0) / max(n_batches - 1, 1) * 1e6
+        n = (n_batches - 1) * batch
+        rows.append(
+            f"index-put-{nm},{us / batch:.3f},"
+            f"wall_us_per_batch={us:.1f};"
+            f"dispatches_per_kop={1e3 * (n_batches - 1) / n:.3f};"
+            f"consolidations={db.counters['consolidations']};timing=1")
+
+        # fused stream: the whole put sequence is ONE lax.scan dispatch
+        db2 = H.make_system("prism", cfg, seed=seed)
+        mk = lambda k: engine.make_op(engine.PUT, k,
+                                      value_width=cfg.value_width)
+        ops = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[mk(keys[i]) for i in range(n_batches)])
+        db2.run_ops(ops)                                  # compile
+        t0 = time.time()
+        db2.run_ops(ops)
+        jax.block_until_ready(db2.estate)
+        us2 = (time.time() - t0) / n_batches * 1e6
+        rows.append(
+            f"index-fused-{nm},{us2 / batch:.3f},"
+            f"wall_us_per_batch={us2:.1f};"
+            f"dispatches_per_kop={1e3 / (n_batches * batch):.3f};"
+            f"consolidations={db2.counters['consolidations']};timing=1")
+    return rows
+
+
 # --------------------------------------------------------------- Fig. 12
 
 def fig12_power_of_k(n_ops=24000, seed=0):
@@ -266,6 +331,7 @@ ALL = {
     "scenarios": scenarios,
     "fig10": fig10_zipf_sweep,
     "fig11b": fig11b_promotions,
+    "index": index_maintenance,
     "fig11c": fig11c_pinning_threshold,
     "fig11d": fig11d_partitions,
     "table5": table5_twitter,

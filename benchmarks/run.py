@@ -33,6 +33,9 @@ def main(argv=None) -> None:
                     help="PRNG seed threaded through every benchmark")
     ap.add_argument("--json", default="BENCH_RESULTS.json",
                     help="output json path ('' disables)")
+    ap.add_argument("--require", default="",
+                    help="comma-separated claim ids that MUST pass "
+                         "(exit 1 otherwise); see _validate for ids")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_benchmarks as P
@@ -60,7 +63,12 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(parsed, f, indent=1, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
-    _validate(rows)
+    results = _validate(rows)
+    required = [r for r in args.require.split(",") if r]
+    missing = [r for r in required if not results.get(r, False)]
+    if missing:
+        print(f"# REQUIRED claims failed: {missing}", file=sys.stderr)
+        sys.exit(1)
 
 
 def _parse(rows, deterministic=False):
@@ -81,13 +89,18 @@ def _parse(rows, deterministic=False):
 
 
 def _validate(rows):
-    """Paper-claims checks (ratios).  Printed, not asserted -- EXPERIMENTS.md
-    records the outcomes."""
+    """Paper-claims checks (ratios).  Printed, not asserted by default --
+    EXPERIMENTS.md records the outcomes.  Returns {claim_id: all_passed};
+    the claim id is the text before the first ':' (several claims can
+    share one id -- ``--require id`` then demands ALL of them)."""
     d = _parse(rows)
     print("\n# --- paper-claim validation ---")
+    results = {}
 
     def claim(name, cond, detail):
         status = "PASS" if cond else "MISS"
+        cid = name.split(":")[0].strip()
+        results[cid] = bool(results.get(cid, True) and cond)
         print(f"# [{status}] {name}: {detail}")
 
     if "fig6-approx-msc" in d and "fig6-rocksdb" in d:
@@ -143,11 +156,34 @@ def _validate(rows):
                         if f"fig8-prism-het{p}" in d))
 
     if "fig11b-promote" in d:
+        pr, no = d["fig11b-promote"], d["fig11b-no-promote"]
         claim("fig11b: promotions raise fast-read ratio on YCSB-C",
-              d["fig11b-promote"]["fast_read_ratio"]
-              > d["fig11b-no-promote"]["fast_read_ratio"],
-              f"promote={d['fig11b-promote']['fast_read_ratio']:.3f} "
-              f"no={d['fig11b-no-promote']['fast_read_ratio']:.3f}")
+              pr["fast_read_ratio"] > no["fast_read_ratio"],
+              f"promote={pr['fast_read_ratio']:.3f} "
+              f"no={no['fast_read_ratio']:.3f}")
+        claim("fig11b: §5.3 read-triggered compactions fire on YCSB-C "
+              "(the knob is live, rows must diverge)",
+              pr["compactions"] > 0
+              and (pr["fast_read_ratio"], pr["slow_read_objs"])
+              != (no["fast_read_ratio"], no["slow_read_objs"]),
+              f"compactions={pr['compactions']:.0f} "
+              f"slow_reads promote={pr['slow_read_objs']:.0f} "
+              f"no={no['slow_read_objs']:.0f}")
+
+    if "index-fused-ns17" in d and "index-fused-ns20" in d:
+        w17 = d["index-fused-ns17"].get("wall_us_per_batch", 0)
+        w20 = d["index-fused-ns20"].get("wall_us_per_batch", 0)
+        claim("index: fused put cost is slow-pool-size independent "
+              "(64x bigger pool, < 2x wall per batch)",
+              0 < w20 <= 2.0 * w17,
+              f"ns17={w17:.0f}us ns20={w20:.0f}us "
+              f"ratio={w20 / max(w17, 1e-9):.2f}x")
+        claim("index: fused put stream beats per-batch stepping's 15.6 "
+              "dispatches/kop",
+              max(d["index-fused-ns17"]["dispatches_per_kop"],
+                  d["index-fused-ns20"]["dispatches_per_kop"]) < 1.0,
+              f"fused={d['index-fused-ns17']['dispatches_per_kop']:.3f} "
+              "per-batch=15.625")
 
     fig12 = sorted((k, v) for k, v in d.items() if k.startswith("fig12"))
     if len(fig12) >= 3:
@@ -183,6 +219,7 @@ def _validate(rows):
         claim("scenarios: fused generate+execute keeps dispatches/kop "
               "below PR 1's per-batch stepping (3.91)",
               worst < 3.91, f"worst dispatches_per_kop={worst:.3f}")
+    return results
 
 
 if __name__ == "__main__":

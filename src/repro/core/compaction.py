@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.core import bloom, mapper, msc, tracker
 from repro.core.tiers import (Counters, TierConfig, TierState, bucket_of,
                               fast_occupancy)
-from repro.core.utils import (PADKEY, alloc_slots, build_sorted_index,
+from repro.core.utils import (PADKEY, alloc_slots, merge_index_update,
                               segment_in_range, sorted_lookup)
 
 
@@ -161,7 +161,12 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
     fast_vals = state.fast_vals.at[ptgt].set(state.slow_vals[sslots],
                                              mode="drop")
     fast_ver = fast_ver.at[ptgt].set(1, mode="drop")
-    fidx_keys, fidx_slots = build_sorted_index(fast_keys)
+    # incremental index maintenance: drop the demoted slots, merge in the
+    # promotions -- O(pool) movement, no full re-sort
+    dropf = jnp.zeros((nf,), bool).at[
+        jnp.where(demote, fslots, nf)].set(True, mode="drop")
+    fidx_keys, fidx_slots = merge_index_update(
+        state.fidx_keys, state.fidx_slots, dropf, skeys, pro_slots, pro_ok)
 
     survive = sm & ~superseded & ~pro_ok
 
@@ -211,7 +216,11 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
         .astype(jnp.int32)
     slow_run = slow_run.at[stgt].set(free_rids[jnp.clip(sub_of, 0, n_sub - 1)],
                                      mode="drop")
-    sidx_keys, sidx_slots = build_sorted_index(slow_keys)
+    # slow index: the freed runs' slots drop out, the merged writes merge
+    # in (runs hold disjoint key ranges, so merged keys are fresh)
+    sidx_keys, sidx_slots = merge_index_update(
+        state.sidx_keys, state.sidx_slots, in_window, mkeys, new_slots,
+        wrote)
 
     # per-sub-run counts and key bounds
     sub_counts = jnp.zeros((n_sub,), jnp.int32).at[sub_of].add(

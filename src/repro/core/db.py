@@ -38,19 +38,23 @@ class PrismDB:
                  pol_cfg: policy.PolicyConfig | None = None,
                  promote: bool = True, precise: bool = False,
                  selection: str = "msc", pin_mode: str = "object",
-                 append_only: bool = False):
+                 append_only: bool = False, consolidate_every: int = 0):
         """``append_only`` models LSM semantics for the baselines: every
         update appends a new version (memtable/L0), so fast-tier space is
         consumed by total write VOLUME, not unique keys -- compactions must
         run at write rate.  PrismDB's slab layout updates in place
         (append_only=False), which is a core §3 advantage.  Implemented as
-        virtual fill accounting; duplicates merge away at compaction."""
+        virtual fill accounting; duplicates merge away at compaction.
+
+        ``consolidate_every``: rebuild the sorted indexes from scratch
+        every N engine steps (hot paths maintain them incrementally; 0
+        disables the fallback, which is exact anyway)."""
         self.cfg = cfg
         self.append_only = append_only
         self.ecfg = EngineConfig(
             tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
             precise=precise, selection=selection, pin_mode=pin_mode,
-            append_only=append_only)
+            append_only=append_only, consolidate_every=consolidate_every)
         self.estate = engine.init(self.ecfg, jax.random.PRNGKey(seed))
         self._step = engine.jit_step(self.ecfg)
         self._run = engine.jit_run_ops(self.ecfg)

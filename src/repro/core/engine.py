@@ -15,15 +15,23 @@ Building blocks (all jit-/vmap-/scan-safe, static shapes):
                     append-only virtual fill + an arbitrary ``payload``
                     pytree mirrored through compactions (KV pages,
                     embedding rows; ``()`` when the store is metadata-only)
-  ``engine_step``   one client batch: op switch (put/get/delete) + the
-                    full maintenance plane as ``lax.while_loop``s
+  ``engine_step``   one client batch, BRANCHLESS: every op kind flows
+                    through one masked structure-of-arrays pass
+                    (``tiers.apply_point_ops`` + a masked scan lane), and
+                    the maintenance plane is gated ``lax.while_loop``s.
+                    No ``lax.switch``/``lax.cond`` ever carries pool-sized
+                    state: on XLA CPU each such branch materializes an
+                    O(pool) pass-through copy per step, which made client
+                    batches scale with ``slow_slots`` instead of batch
+                    size (tests/test_hlo_budget.py pins this down)
   ``run_ops``       ``lax.scan`` over a stacked op stream: a whole
                     workload segment under one dispatch
-  ``maintain``      the bounded compaction loop alone (rate limit +
-                    watermark hysteresis), reused by the serving engine
-                    and the embedding store around their own data ops
-  ``read_policy``   the §5.3 DETECT/ACTIVE/COOLDOWN step + its
-                    compaction budget
+  ``maintenance``   the WHOLE maintenance plane -- §4.2 rate limit,
+                    watermark hysteresis, §5.3 policy budget -- as one
+                    bounded, kind-gated ``lax.while_loop``; reused by
+                    the serving engine and the embedding store around
+                    their own data ops (``maintain`` / ``read_policy``
+                    are single-concern wrappers)
 
 ``mirror(payload, movement) -> payload`` replays each compaction's
 ``Movement`` on the payload pools inside the same jitted step -- the
@@ -59,6 +67,10 @@ class EngineConfig(NamedTuple):
     max_rounds: int = 256       # compaction-round bound per engine step
                                 # (matches the old host rate-limit loop; the
                                 # while_loop body is traced once regardless)
+    consolidate_every: int = 0  # full index rebuild every N engine steps
+                                # (0 = never: incremental maintenance is
+                                # exact; the fallback is hygiene for pad
+                                # entries, counted in ctr.consolidations)
 
 
 class EngineState(NamedTuple):
@@ -67,6 +79,7 @@ class EngineState(NamedTuple):
     pol: policy.PolicyState
     rng: jax.Array
     virtual_extra: jax.Array    # i32: append-only phantom fast-tier fill
+    steps: jax.Array            # i32: engine steps (consolidation clock)
     payload: Any = ()           # pytree mirrored through compactions
 
 
@@ -101,7 +114,8 @@ def init(cfg: EngineConfig, rng: jax.Array, payload: Any = (),
     return dealias(EngineState(
         tier=tier if tier is not None else tiers.init(cfg.tier),
         pol=policy.init(), rng=rng,
-        virtual_extra=jnp.zeros((), jnp.int32), payload=payload))
+        virtual_extra=jnp.zeros((), jnp.int32),
+        steps=jnp.zeros((), jnp.int32), payload=payload))
 
 
 def make_op(kind: int, keys: jax.Array, vals: jax.Array | None = None,
@@ -148,57 +162,104 @@ def _compact1(state: EngineState, cfg: EngineConfig,
                           payload=payload)
 
 
-def maintain(state: EngineState, cfg: EngineConfig,
-             need: jax.Array | int = 0, *, mirror: MirrorFn | None = None,
-             force_pin_keys: jax.Array | None = None) -> EngineState:
-    """Bounded compaction loop, fully on device.
+def maintenance(state: EngineState, cfg: EngineConfig, *,
+                need: jax.Array | int = 0,
+                wm_gate: jax.Array | bool = True,
+                policy_enable: jax.Array | bool = True,
+                mirror: MirrorFn | None = None,
+                force_pin_keys: jax.Array | None = None) -> EngineState:
+    """The WHOLE maintenance plane as ONE bounded while_loop.
 
-    Compacts while (a) usable fast slots (free minus append-only virtual
-    fill) are below ``need`` -- the paper's §4.2 rate limit: writes stall
-    until the compaction job frees space -- or (b) occupancy crossed the
-    high watermark, continuing with hysteresis until below the low
-    watermark.  ``cfg.max_rounds`` bounds the loop (static trip bound).
+    Fuses the §4.2 rate limit (compact while usable fast slots -- free
+    minus append-only virtual fill -- are below ``need``: writes stall
+    until the compaction job frees space), the watermark hysteresis loop
+    (on crossing the high watermark, continue until below the low one),
+    and the §5.3 policy budget into a single ``_compact1`` loop bounded
+    by ``cfg.max_rounds``.
+
+    One loop instead of three matters twice inside the workload scan:
+    the compaction body is traced/compiled once per step instead of
+    three times, and XLA CPU pays the pool-sized carry-tuple copies for
+    one nested while instead of three (charged even at zero iterations).
+    Every gate may be a traced boolean, so the branchless engine step
+    masks by op kind with no ``lax.cond`` -- whose taken-branch would
+    materialize an O(pool) copy of the engine state every step.
+
+    The policy machine only advances when ``policy_enable`` (the engine
+    step passes reads); the watermark trigger only arms when ``wm_gate``.
     """
     need = jnp.asarray(need, jnp.int32)
+    total = (state.tier.ctr.gets + state.tier.ctr.puts
+             + state.tier.ctr.scans)
+    pol_next, go = policy.step(state.pol, state.tier, cfg.pol,
+                               total_ops=total)
+    pol = jax.tree.map(lambda a, b: jnp.where(policy_enable, a, b),
+                       pol_next, state.pol)
+    state = state._replace(pol=pol)
+    n_pol = jnp.where(policy_enable & go & (pol_next.phase == policy.ACTIVE),
+                      cfg.pol.compactions_per_epoch_step, 0)
+    wm0 = wm_gate & (tiers.fast_occupancy(state.tier)
+                     >= cfg.tier.high_watermark)
 
     def usable(s: EngineState) -> jax.Array:
         return tiers.free_fast_slots(s.tier) - s.virtual_extra
 
     def cond(carry):
-        s, rounds, wm = carry
+        s, rounds = carry
         occ = tiers.fast_occupancy(s.tier)
         return (rounds < cfg.max_rounds) & (
-            (usable(s) < need) | (wm & (occ >= cfg.tier.low_watermark)))
+            (usable(s) < need)
+            | (wm0 & (occ >= cfg.tier.low_watermark))
+            | (rounds < n_pol))
 
     def body(carry):
-        s, rounds, wm = carry
-        return _compact1(s, cfg, mirror, force_pin_keys), rounds + 1, wm
+        s, rounds = carry
+        return _compact1(s, cfg, mirror, force_pin_keys), rounds + 1
 
-    wm0 = tiers.fast_occupancy(state.tier) >= cfg.tier.high_watermark
-    state, _, _ = lax.while_loop(cond, body,
-                                 (state, jnp.zeros((), jnp.int32), wm0))
+    state, _ = lax.while_loop(cond, body,
+                              (state, jnp.zeros((), jnp.int32)))
     return state
+
+
+def maintain(state: EngineState, cfg: EngineConfig,
+             need: jax.Array | int = 0, *, mirror: MirrorFn | None = None,
+             force_pin_keys: jax.Array | None = None,
+             wm_gate: jax.Array | bool = True) -> EngineState:
+    """Rate-limit + watermark compactions only (no policy step)."""
+    return maintenance(state, cfg, need=need, wm_gate=wm_gate,
+                       policy_enable=False, mirror=mirror,
+                       force_pin_keys=force_pin_keys)
 
 
 def read_policy(state: EngineState, cfg: EngineConfig, *,
                 mirror: MirrorFn | None = None,
-                force_pin_keys: jax.Array | None = None) -> EngineState:
-    """§5.3 read-triggered policy step + its per-step compaction budget."""
-    total = (state.tier.ctr.gets + state.tier.ctr.puts
-             + state.tier.ctr.scans)
-    pol, go = policy.step(state.pol, state.tier, cfg.pol, total_ops=total)
-    state = state._replace(pol=pol)
-
-    def run(s: EngineState) -> EngineState:
-        return lax.fori_loop(
-            0, cfg.pol.compactions_per_epoch_step,
-            lambda _, ss: _compact1(ss, cfg, mirror, force_pin_keys), s)
-
-    return lax.cond(go & (pol.phase == policy.ACTIVE), run, lambda s: s,
-                    state)
+                force_pin_keys: jax.Array | None = None,
+                enable: jax.Array | bool = True) -> EngineState:
+    """§5.3 read-triggered policy step + its compaction budget only."""
+    return maintenance(state, cfg, need=0, wm_gate=False,
+                       policy_enable=enable, mirror=mirror,
+                       force_pin_keys=force_pin_keys)
 
 
 # ------------------------------------------------------------ engine step
+
+def _consolidation_tick(state: EngineState, cfg: EngineConfig
+                        ) -> EngineState:
+    """Periodic full index rebuild, as a count-gated while_loop (runs the
+    body at most once; never a cond, which would copy pool state)."""
+    due = (state.steps % cfg.consolidate_every) == cfg.consolidate_every - 1
+
+    def cond(carry):
+        return (carry[1] == 0) & due
+
+    def body(carry):
+        t, _ = carry
+        return tiers.consolidate_indexes(t), jnp.int32(1)
+
+    tier, _ = lax.while_loop(cond, body,
+                             (state.tier, jnp.zeros((), jnp.int32)))
+    return state._replace(tier=tier)
+
 
 def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
                 mirror: MirrorFn | None = None,
@@ -206,55 +267,63 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
                 ) -> tuple[EngineState, OpResult]:
     """One client batch, control plane included: a single dispatch.
 
-    put    -> rate-limit compactions, insert, append-only fill accounting,
-              watermark compactions
-    get    -> lookup, §5.3 policy step (+ its compactions)
-    delete -> tombstone/free
-    scan   -> bounded sorted-index range scan (reads: policy step too)
+    Branchless: ``op.kind`` is a traced scalar turned into lane masks, so
+    one compiled body serves put/get/delete/scan -- inside the workload
+    ``lax.scan`` no per-kind branch exists to materialize pool-sized
+    copies, and a single compilation covers every op stream.
+
+    The maintenance plane runs as ONE loop before the data op: the §4.2
+    rate limit frees this batch's write headroom, the watermark
+    hysteresis (armed at every step boundary -- the async job drains the
+    previous put's overflow at the next step), and the §5.3 budget for
+    read batches.  Then the masked point-op pass + the scan lane, and
+    append-only virtual-fill accounting on put batches.
     """
+    is_put = op.kind == PUT
+    is_get = op.kind == GET
+    is_del = op.kind == DELETE
+    is_scan = op.kind == SCAN
+
+    # ONE pre-op maintenance loop: §4.2 rate limit for this batch's
+    # writes, watermark hysteresis (armed at every step boundary: the
+    # async job drains the previous put's overflow), §5.3 policy budget
+    need = jnp.where(is_put, jnp.sum(op.valid.astype(jnp.int32)), 0)
+    state = maintenance(state, cfg, need=need, wm_gate=True,
+                        policy_enable=is_get | is_scan, mirror=mirror,
+                        force_pin_keys=force_pin_keys)
+    before = tiers.free_fast_slots(state.tier)
+
+    # one masked pass for the point lanes, sharing the index lookups
+    tier, gvals, gfound, gsrc = tiers.apply_point_ops(
+        state.tier, cfg.tier, op.keys, op.vals, op.valid,
+        is_put=is_put, is_get=is_get, is_del=is_del)
+    # scan lane: zero-length windows unless this batch is a scan
+    lens = jnp.where(is_scan, jnp.minimum(op.aux, cfg.scan_chunk), 0)
+    tier, n_live = tiers.scan_batch(tier, cfg.tier, op.keys, lens,
+                                    op.valid & is_scan,
+                                    chunk=cfg.scan_chunk)
+    state = state._replace(tier=tier)
+
+    if cfg.append_only:
+        # versions appended, not updated: in-place updates still consume
+        # virtual space until the next merge
+        fresh = before - tiers.free_fast_slots(tier)
+        state = state._replace(
+            virtual_extra=state.virtual_extra
+            + jnp.where(is_put, jnp.maximum(need - fresh, 0), 0))
+
+    state = state._replace(steps=state.steps + 1)
+    if cfg.consolidate_every > 0:
+        state = _consolidation_tick(state, cfg)
+
     b, v = op.vals.shape
-    empty = OpResult(vals=jnp.zeros((b, v), jnp.float32),
-                     found=jnp.zeros((b,), bool),
-                     src=jnp.full((b,), -1, jnp.int32))
-
-    def do_put(s: EngineState):
-        need = jnp.sum(op.valid.astype(jnp.int32))
-        s = maintain(s, cfg, need=need, mirror=mirror,
-                     force_pin_keys=force_pin_keys)
-        before = tiers.free_fast_slots(s.tier)
-        tier = tiers.put_batch(s.tier, cfg.tier, op.keys, op.vals, op.valid)
-        s = s._replace(tier=tier)
-        if cfg.append_only:
-            # versions appended, not updated: in-place updates still consume
-            # virtual space until the next merge
-            fresh = before - tiers.free_fast_slots(tier)
-            s = s._replace(virtual_extra=s.virtual_extra
-                           + jnp.maximum(need - fresh, 0))
-        s = maintain(s, cfg, need=0, mirror=mirror,
-                     force_pin_keys=force_pin_keys)
-        return s, empty
-
-    def do_get(s: EngineState):
-        tier, vals, found, src = tiers.get_batch(s.tier, cfg.tier, op.keys,
-                                                 op.valid)
-        s = read_policy(s._replace(tier=tier), cfg, mirror=mirror,
-                        force_pin_keys=force_pin_keys)
-        return s, OpResult(vals=vals.astype(jnp.float32), found=found,
-                           src=src)
-
-    def do_delete(s: EngineState):
-        tier = tiers.delete_batch(s.tier, cfg.tier, op.keys, op.valid)
-        return s._replace(tier=tier), empty
-
-    def do_scan(s: EngineState):
-        lens = jnp.minimum(op.aux, cfg.scan_chunk)
-        tier, n_live = tiers.scan_batch(s.tier, cfg.tier, op.keys, lens,
-                                        op.valid, chunk=cfg.scan_chunk)
-        s = read_policy(s._replace(tier=tier), cfg, mirror=mirror,
-                        force_pin_keys=force_pin_keys)
-        return s, OpResult(vals=empty.vals, found=n_live > 0, src=n_live)
-
-    return lax.switch(op.kind, [do_put, do_get, do_delete, do_scan], state)
+    res = OpResult(
+        vals=jnp.where(is_get, gvals.astype(jnp.float32),
+                       jnp.zeros((b, v), jnp.float32)),
+        found=jnp.where(is_get, gfound, is_scan & (n_live > 0)),
+        src=jnp.where(is_get, gsrc,
+                      jnp.where(is_scan, n_live, -1)).astype(jnp.int32))
+    return state, res
 
 
 def run_ops(state: EngineState, ops: OpBatch, cfg: EngineConfig, *,

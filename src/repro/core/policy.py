@@ -36,6 +36,11 @@ class PolicyConfig(NamedTuple):
     read_heavy_frac: float = 0.8      # reads/ops above this = read-dominated
     slow_tracked_frac: float = 0.3    # tracked-on-slow share that triggers
     compactions_per_epoch_step: int = 1
+    detect_ops: int = 0               # DETECT rate window (0 -> epoch_ops)
+
+    @property
+    def detect_window(self) -> int:
+        return self.detect_ops or self.epoch_ops
 
 
 class PolicyState(NamedTuple):
@@ -43,13 +48,14 @@ class PolicyState(NamedTuple):
     ops_mark: jax.Array         # i32 op counter at phase entry
     fast_hits_mark: jax.Array   # i32 ctr.hits_fast at epoch start
     gets_mark: jax.Array        # i32 ctr.gets at epoch start
+    reads_mark: jax.Array       # i32 ctr.gets + ctr.scans at window start
     prev_ratio: jax.Array       # f32 fast-read ratio of previous epoch
 
 
 def init() -> PolicyState:
     z = jnp.zeros((), jnp.int32)
     return PolicyState(phase=jnp.zeros((), jnp.int32), ops_mark=z,
-                       fast_hits_mark=z, gets_mark=z,
+                       fast_hits_mark=z, gets_mark=z, reads_mark=z,
                        prev_ratio=jnp.zeros((), jnp.float32))
 
 
@@ -63,21 +69,32 @@ def step(pol: PolicyState, state: TierState, cfg: PolicyConfig,
          total_ops: jax.Array) -> tuple[PolicyState, jax.Array]:
     """Advance the state machine; returns (policy', should_compact_now)."""
     ops_in_phase = total_ops - pol.ops_mark
-    reads = state.ctr.gets.astype(jnp.float32)
-    ops = jnp.maximum((state.ctr.gets + state.ctr.puts).astype(jnp.float32),
-                      1.0)
-    read_heavy = reads / ops >= cfg.read_heavy_frac
+    # DETECT rates are measured over a SLIDING window (the marks), not
+    # lifetime counters: a preload or an earlier write-heavy phase must
+    # not dilute the read fraction of the current workload forever (it
+    # did -- fig11b's read-only phase never registered as read-heavy, so
+    # the §5.3 trigger and its promotions never fired).  Scans count as
+    # reads on BOTH sides of the fraction (total_ops includes them and
+    # the engine advances the policy on scan batches).
+    reads = state.ctr.gets + state.ctr.scans
+    reads_w = (reads - pol.reads_mark).astype(jnp.float32)
+    ops_w = jnp.maximum(ops_in_phase.astype(jnp.float32), 1.0)
+    read_heavy = reads_w / ops_w >= cfg.read_heavy_frac
+    window_full = ops_in_phase >= cfg.detect_window
     slow_tracked = (1.0 - tracker.fast_fraction_of_tracked(state.tracker)
                     ) >= cfg.slow_tracked_frac
 
     def from_detect(p):
-        trigger = read_heavy & slow_tracked
+        trigger = window_full & read_heavy & slow_tracked
+        slide = window_full & ~trigger     # restart the rate window
+        moved = trigger | slide
         newp = PolicyState(
             phase=jnp.where(trigger, ACTIVE, DETECT).astype(jnp.int32),
-            ops_mark=jnp.where(trigger, total_ops, p.ops_mark),
-            fast_hits_mark=jnp.where(trigger, state.ctr.hits_fast,
+            ops_mark=jnp.where(moved, total_ops, p.ops_mark),
+            fast_hits_mark=jnp.where(moved, state.ctr.hits_fast,
                                      p.fast_hits_mark),
-            gets_mark=jnp.where(trigger, state.ctr.gets, p.gets_mark),
+            gets_mark=jnp.where(moved, state.ctr.gets, p.gets_mark),
+            reads_mark=jnp.where(moved, reads, p.reads_mark),
             prev_ratio=jnp.where(trigger, _fast_ratio(state, p),
                                  p.prev_ratio))
         return newp, trigger
@@ -94,14 +111,21 @@ def step(pol: PolicyState, state: TierState, cfg: PolicyConfig,
             fast_hits_mark=jnp.where(epoch_done, state.ctr.hits_fast,
                                      p.fast_hits_mark),
             gets_mark=jnp.where(epoch_done, state.ctr.gets, p.gets_mark),
+            reads_mark=jnp.where(epoch_done, reads, p.reads_mark),
             prev_ratio=jnp.where(epoch_done, ratio, p.prev_ratio))
         return newp, ~cool
 
     def from_cooldown(p):
         done = ops_in_phase >= cfg.cooldown_ops
+        # re-entering DETECT restarts the rate window: stale marks from
+        # the last ACTIVE epoch must not inflate the first measurement
         newp = p._replace(
             phase=jnp.where(done, DETECT, COOLDOWN).astype(jnp.int32),
-            ops_mark=jnp.where(done, total_ops, p.ops_mark))
+            ops_mark=jnp.where(done, total_ops, p.ops_mark),
+            fast_hits_mark=jnp.where(done, state.ctr.hits_fast,
+                                     p.fast_hits_mark),
+            gets_mark=jnp.where(done, state.ctr.gets, p.gets_mark),
+            reads_mark=jnp.where(done, reads, p.reads_mark))
         return newp, jnp.zeros((), bool)
 
     newp, go = jax.lax.switch(pol.phase, [from_detect, from_active,

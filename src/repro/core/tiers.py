@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.core import bloom, tracker
 from repro.core.tracker import TrackerState
 from repro.core.utils import (PADKEY, alloc_slots, build_sorted_index,
-                              dedupe_keep_last, sorted_lookup)
+                              dedupe_keep_last, merge_index_update,
+                              sorted_lookup)
 
 
 class TierConfig(NamedTuple):
@@ -61,6 +62,7 @@ class Counters(NamedTuple):
     slow_writes: jax.Array
     bloom_probes: jax.Array
     bloom_fps: jax.Array
+    consolidations: jax.Array  # periodic full index rebuilds (fallback)
     comp_reads: jax.Array      # slow reads issued by compactions (sequential)
     scans: jax.Array           # range-scan lanes served
     scan_objs: jax.Array       # objects returned by scans (either tier)
@@ -155,144 +157,175 @@ def run_of_keys(state: TierState, keys: jax.Array) -> jax.Array:
     return jnp.where(any_cover, rid, -1)
 
 
-# ----------------------------------------------------------------- put path
+# ------------------------------------------------- point ops (one pass)
 
-def put_batch(state: TierState, cfg: TierConfig, keys: jax.Array,
-              vals: jax.Array, valid: jax.Array) -> TierState:
-    """Insert/update a batch.  All writes land on the fast tier (paper §4.2):
-    existing fast objects update in place, fresh keys take a free slot."""
+def apply_point_ops(state: TierState, cfg: TierConfig, keys: jax.Array,
+                    vals: jax.Array, valid: jax.Array, *,
+                    is_put, is_get, is_del
+                    ) -> tuple[TierState, jax.Array, jax.Array, jax.Array]:
+    """Branchless put/get/delete: one masked structure-of-arrays pass.
+
+    The kind flags may be traced booleans (at most one true), so a stacked
+    op stream runs every batch through ONE compiled body -- no ``lax.switch``
+    materializing a pool-sized pass-through copy per branch (the XLA CPU
+    regression the HLO copy-budget test guards).  All three lanes share the
+    index lookups and the bloom probe; pool writes are scatters whose
+    targets are masked out-of-bounds (``mode="drop"``) on inactive lanes,
+    and the sorted fast index is maintained with a single incremental
+    ``merge_index_update`` -- never a full-pool re-sort.
+
+    Returns ``(state', vals, found, source)``; the get-lane outputs are
+    garbage unless ``is_get``.
+
+    put    (paper §4.2): existing fast objects update in place, fresh keys
+           take a free slot.
+    get    (paper §4.1): fast index -> bloom -> slow run; every
+           bloom-positive probe of the slow tier is charged a slow read,
+           false positives included.
+    delete (paper §6): fast copies freed; keys that may survive on the
+           slow tier leave a tombstone in the fast tier (cleared at
+           compaction).
+    """
+    nf = state.fast_keys.shape[0]
+    nb = cfg.n_buckets
     keep = dedupe_keep_last(keys, valid)
-    slot, found = sorted_lookup(state.fidx_keys, state.fidx_slots, keys)
-    found = found & keep
 
-    # in-place updates
-    upd_tgt = jnp.where(found, slot, state.fast_keys.shape[0])
+    # ---- shared lookups -------------------------------------------------
+    fslot, flook = sorted_lookup(state.fidx_keys, state.fidx_slots, keys)
+    tomb = state.fast_ver[jnp.clip(fslot, 0)] < 0
+    rid = run_of_keys(state, keys)
+    maybe0 = bloom.query_per_key(state.blooms, rid, keys)
+    sslot, sfound = sorted_lookup(state.sidx_keys, state.sidx_slots, keys)
+    b = bucket_of(cfg, keys)
+
+    # ---- lane masks -----------------------------------------------------
+    putk = keep & is_put
+    upd = flook & putk                    # put: in-place value update
+    fresh_put = putk & ~flook             # put: fresh insert
+    delk = keep & is_del
+    dfound = flook & delk
+    maybe_del = maybe0 & delk
+    free_d = dfound & ~maybe_del          # delete: free the fast slot
+    tomb_old = dfound & maybe_del         # delete: tombstone existing slot
+    tomb_fresh = maybe_del & ~dfound      # delete: tombstone takes a slot
+
+    # ---- allocation (delete's frees are visible to its own tombstones) --
+    fast_keys = state.fast_keys.at[
+        jnp.where(free_d, fslot, nf)].set(-1, mode="drop")
+    want = fresh_put | tomb_fresh
+    new_slots = alloc_slots(fast_keys, want)
+    ins_ok = want & (new_slots >= 0)
+
+    # ---- pool writes ----------------------------------------------------
+    upd_tgt = jnp.where(upd, fslot, nf)
     fast_vals = state.fast_vals.at[upd_tgt].set(vals, mode="drop")
     fast_ver = state.fast_ver.at[upd_tgt].set(
-        jnp.abs(state.fast_ver[jnp.clip(slot, 0)]) + 1, mode="drop")
+        jnp.abs(state.fast_ver[jnp.clip(fslot, 0)]) + 1, mode="drop")
+    ins_put = ins_ok & fresh_put
+    ptgt = jnp.where(ins_put, new_slots, nf)
+    fast_keys = fast_keys.at[ptgt].set(keys, mode="drop")
+    fast_vals = fast_vals.at[ptgt].set(vals, mode="drop")
+    fast_ver = fast_ver.at[ptgt].set(1, mode="drop")
+    tomb_ok = tomb_old | (tomb_fresh & ins_ok)
+    ttgt = jnp.where(tomb_ok, jnp.where(tomb_old, fslot, new_slots), nf)
+    fast_keys = fast_keys.at[ttgt].set(keys, mode="drop")
+    fast_ver = fast_ver.at[ttgt].set(-1, mode="drop")
 
-    # fresh inserts
-    fresh = keep & ~found
-    new_slots = alloc_slots(state.fast_keys, fresh)
-    ins_ok = fresh & (new_slots >= 0)
-    ins_tgt = jnp.where(ins_ok, new_slots, state.fast_keys.shape[0])
-    fast_keys = state.fast_keys.at[ins_tgt].set(keys, mode="drop")
-    fast_vals = fast_vals.at[ins_tgt].set(vals, mode="drop")
-    fast_ver = fast_ver.at[ins_tgt].set(1, mode="drop")
-    fidx_keys, fidx_slots = build_sorted_index(fast_keys)
+    # ---- ONE incremental index update for both mutating lanes -----------
+    dropm = jnp.zeros((nf,), bool).at[
+        jnp.where(free_d, fslot, nf)].set(True, mode="drop")
+    fidx_keys, fidx_slots = merge_index_update(
+        state.fidx_keys, state.fidx_slots, dropm, keys, new_slots, ins_ok)
 
-    # bucket stats: fresh keys enter the fast tier; if a covering run's bloom
-    # says the key may already live on the slow tier, count it as overlap.
-    b = bucket_of(cfg, keys)
-    btgt = jnp.where(ins_ok, b, cfg.n_buckets)
-    bucket_fast = state.bucket_fast.at[btgt].add(1, mode="drop")
-    rid = run_of_keys(state, keys)
-    maybe_slow = bloom.query_per_key(state.blooms, rid, keys) & ins_ok
-    otgt = jnp.where(maybe_slow, b, cfg.n_buckets)
-    bucket_overlap = state.bucket_overlap.at[otgt].add(1, mode="drop")
+    # ---- bucket stats ---------------------------------------------------
+    bucket_fast = state.bucket_fast.at[
+        jnp.where(ins_ok, b, nb)].add(1, mode="drop")
+    bucket_fast = bucket_fast.at[jnp.where(free_d, b, nb)].add(-1,
+                                                               mode="drop")
+    bucket_overlap = state.bucket_overlap.at[
+        jnp.where(maybe0 & ins_put, b, nb)].add(1, mode="drop")
 
-    trk = tracker.access_batched(state.tracker, keys,
-                                 jnp.zeros_like(keys, jnp.int8), keep)
+    # ---- get lane (reads the PRE-op pools: kinds are exclusive) ---------
+    g = valid & is_get
+    fhit = flook & g & ~tomb
+    need_slow = g & ~flook               # tombstone hides slow copy
+    maybe_g = maybe0 & need_slow
+    shit = sfound & maybe_g
+    fvals = state.fast_vals[jnp.clip(fslot, 0)]
+    svals = state.slow_vals[jnp.clip(sslot, 0)]
+    out_vals = jnp.where(fhit[:, None], fvals,
+                         jnp.where(shit[:, None], svals, 0))
+    found = fhit | shit
+    source = jnp.where(fhit, 0, jnp.where(shit, 1, -1)).astype(jnp.int32)
 
-    n = jnp.sum(keep.astype(jnp.int32))
+    # ---- tracker --------------------------------------------------------
+    trk = tracker.access_batched(
+        state.tracker, keys, jnp.where(shit, 1, 0).astype(jnp.int8),
+        putk | (g & found))
+
+    # ---- counters -------------------------------------------------------
+    cnt = lambda m: jnp.sum(m.astype(jnp.int32))
+    n_put = cnt(putk)
     ctr = state.ctr._replace(
-        puts=state.ctr.puts + n,
-        fast_writes=state.ctr.fast_writes + n,
+        puts=state.ctr.puts + n_put,
+        fast_writes=state.ctr.fast_writes + n_put,
+        gets=state.ctr.gets + cnt(g),
+        hits_fast=state.ctr.hits_fast + cnt(fhit),
+        hits_slow=state.ctr.hits_slow + cnt(shit),
+        misses=state.ctr.misses + cnt(g & ~found),
+        fast_reads=state.ctr.fast_reads + cnt(fhit),
+        slow_reads=state.ctr.slow_reads + cnt(maybe_g),
+        bloom_probes=state.ctr.bloom_probes + cnt(need_slow),
+        bloom_fps=state.ctr.bloom_fps + cnt(maybe_g & ~sfound),
     )
-    return state._replace(
+    state = state._replace(
         fast_keys=fast_keys, fast_vals=fast_vals, fast_ver=fast_ver,
         fidx_keys=fidx_keys, fidx_slots=fidx_slots,
         bucket_fast=bucket_fast, bucket_overlap=bucket_overlap,
         tracker=trk, ctr=ctr)
+    return state, out_vals, found, source
 
 
-# ----------------------------------------------------------------- get path
+def consolidate_indexes(state: TierState) -> TierState:
+    """Full-rebuild fallback: re-derive both sorted indexes from the pools
+    (restores canonical pad-entry slots; live entries are already exact)."""
+    fk, fs = build_sorted_index(state.fast_keys)
+    sk, ss = build_sorted_index(state.slow_keys)
+    ctr = state.ctr._replace(
+        consolidations=state.ctr.consolidations + 1)
+    return state._replace(fidx_keys=fk, fidx_slots=fs,
+                          sidx_keys=sk, sidx_slots=ss, ctr=ctr)
+
+
+# ---------------------------------------------- single-kind conveniences
+
+def put_batch(state: TierState, cfg: TierConfig, keys: jax.Array,
+              vals: jax.Array, valid: jax.Array) -> TierState:
+    """Insert/update a batch (static-kind specialization of the masked
+    pass; XLA folds the dead lanes away)."""
+    state, _, _, _ = apply_point_ops(state, cfg, keys, vals, valid,
+                                     is_put=True, is_get=False, is_del=False)
+    return state
+
 
 def get_batch(state: TierState, cfg: TierConfig, keys: jax.Array,
               valid: jax.Array) -> tuple[TierState, jax.Array, jax.Array,
                                          jax.Array]:
-    """Returns (state', vals, found, source) with source 0=fast 1=slow -1=miss.
-
-    Lookup order (paper §4.1): fast index -> bloom -> slow run.  Every
-    bloom-positive probe of the slow tier is charged a slow read, including
-    false positives.
-    """
-    fslot, ffound = sorted_lookup(state.fidx_keys, state.fidx_slots, keys)
-    ffound = ffound & valid
-    tomb = state.fast_ver[jnp.clip(fslot, 0)] < 0
-    fhit = ffound & ~tomb
-    fvals = state.fast_vals[jnp.clip(fslot, 0)]
-
-    need_slow = valid & ~ffound          # tombstone hides slow copy
-    rid = run_of_keys(state, keys)
-    maybe = bloom.query_per_key(state.blooms, rid, keys) & need_slow
-    sslot, sfound = sorted_lookup(state.sidx_keys, state.sidx_slots, keys)
-    shit = sfound & maybe
-    svals = state.slow_vals[jnp.clip(sslot, 0)]
-
-    vals = jnp.where(fhit[:, None], fvals, jnp.where(shit[:, None], svals, 0))
-    found = fhit | shit
-    source = jnp.where(fhit, 0, jnp.where(shit, 1, -1)).astype(jnp.int32)
-
-    trk = tracker.access_batched(state.tracker, keys,
-                                 jnp.where(shit, 1, 0).astype(jnp.int8),
-                                 valid & found)
-
-    n = jnp.sum(valid.astype(jnp.int32))
-    nf = jnp.sum(fhit.astype(jnp.int32))
-    nprobe = jnp.sum(maybe.astype(jnp.int32))
-    nshit = jnp.sum(shit.astype(jnp.int32))
-    ctr = state.ctr._replace(
-        gets=state.ctr.gets + n,
-        hits_fast=state.ctr.hits_fast + nf,
-        hits_slow=state.ctr.hits_slow + nshit,
-        misses=state.ctr.misses + jnp.sum((valid & ~found).astype(jnp.int32)),
-        fast_reads=state.ctr.fast_reads + nf,
-        slow_reads=state.ctr.slow_reads + nprobe,
-        bloom_probes=state.ctr.bloom_probes
-        + jnp.sum(need_slow.astype(jnp.int32)),
-        bloom_fps=state.ctr.bloom_fps
-        + jnp.sum((maybe & ~sfound).astype(jnp.int32)),
-    )
-    return state._replace(tracker=trk, ctr=ctr), vals, found, source
+    """Returns (state', vals, found, source), source 0=fast 1=slow -1=miss."""
+    vals = jnp.zeros((keys.shape[0], state.fast_vals.shape[1]),
+                     state.fast_vals.dtype)
+    return apply_point_ops(state, cfg, keys, vals, valid,
+                           is_put=False, is_get=True, is_del=False)
 
 
 def delete_batch(state: TierState, cfg: TierConfig, keys: jax.Array,
                  valid: jax.Array) -> TierState:
-    """Client deletes (paper §6): fast copies freed; keys that may survive on
-    the slow tier leave a tombstone in the fast tier (cleared at compaction).
-    """
-    keep = dedupe_keep_last(keys, valid)
-    fslot, ffound = sorted_lookup(state.fidx_keys, state.fidx_slots, keys)
-    ffound = ffound & keep
-
-    rid = run_of_keys(state, keys)
-    maybe_slow = bloom.query_per_key(state.blooms, rid, keys) & keep
-
-    nf = state.fast_keys.shape[0]
-    # case 1: fast copy exists, no slow copy -> free the slot
-    free_tgt = jnp.where(ffound & ~maybe_slow, fslot, nf)
-    fast_keys = state.fast_keys.at[free_tgt].set(-1, mode="drop")
-    b = bucket_of(cfg, keys)
-    bucket_fast = state.bucket_fast.at[
-        jnp.where(ffound & ~maybe_slow, b, cfg.n_buckets)].add(-1, mode="drop")
-    # case 2: slow copy may exist -> tombstone in fast tier
-    need_tomb = maybe_slow
-    tomb_slot = jnp.where(ffound, fslot, -1)
-    fresh_tomb = need_tomb & ~ffound
-    new_slots = alloc_slots(fast_keys, fresh_tomb)
-    tomb_slot = jnp.where(fresh_tomb, new_slots, tomb_slot)
-    ok = need_tomb & (tomb_slot >= 0)
-    ttgt = jnp.where(ok, tomb_slot, nf)
-    fast_keys = fast_keys.at[ttgt].set(keys, mode="drop")
-    fast_ver = state.fast_ver.at[ttgt].set(-1, mode="drop")
-    bucket_fast = bucket_fast.at[
-        jnp.where(fresh_tomb & ok, b, cfg.n_buckets)].add(1, mode="drop")
-
-    fidx_keys, fidx_slots = build_sorted_index(fast_keys)
-    return state._replace(fast_keys=fast_keys, fast_ver=fast_ver,
-                          fidx_keys=fidx_keys, fidx_slots=fidx_slots,
-                          bucket_fast=bucket_fast)
+    """Client deletes (paper §6)."""
+    vals = jnp.zeros((keys.shape[0], state.fast_vals.shape[1]),
+                     state.fast_vals.dtype)
+    state, _, _, _ = apply_point_ops(state, cfg, keys, vals, valid,
+                                     is_put=False, is_get=False, is_del=True)
+    return state
 
 
 def _scan_windows(state: TierState, lo: jax.Array, take: int

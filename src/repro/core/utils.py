@@ -48,10 +48,87 @@ def sorted_lookup(index_keys: jax.Array, index_vals: jax.Array,
 
 
 def build_sorted_index(pool_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """(sorted_keys, slot_of_sorted) over a pool; free slots sort to the end."""
+    """(sorted_keys, slot_of_sorted) over a pool; free slots sort to the end.
+
+    Full O(N log N) rebuild.  Hot paths maintain the index incrementally
+    with ``merge_index_update``; this survives as the init path, the oracle
+    the property tests compare against, and the periodic consolidation
+    fallback (``EngineConfig.consolidate_every``).
+    """
     k = jnp.where(pool_keys < 0, PADKEY, pool_keys)
     order = jnp.argsort(k)
     return k[order], order.astype(jnp.int32)
+
+
+def merge_index_update(idx_keys: jax.Array, idx_slots: jax.Array,
+                       drop: jax.Array, ins_keys: jax.Array,
+                       ins_slots: jax.Array, ins_valid: jax.Array
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Incremental sorted-index maintenance: merge a batch update into a
+    PADKEY-padded sorted index without re-sorting the pool.
+
+    ``drop`` is bool[N] over POOL SLOTS: live entries whose slot is marked
+    become pads.  ``ins_*`` is a static-width batch of (key, slot) pairs to
+    insert as live entries.  Preconditions (all op paths satisfy them):
+      * inserted keys are unique within the batch and not live in the
+        index after drops are applied;
+      * ``idx_slots`` values are in [0, N).
+
+    Cost: O(N) data movement + O(B log B) batch sort + searchsorted --
+    no O(N log N) full sort.  The result's live prefix is bit-identical
+    to ``build_sorted_index`` of the updated pool; pad-entry slot values
+    are arbitrary-but-deterministic (nothing reads them: lookups and
+    scans mask on ``key != PADKEY`` before using a slot).
+    """
+    n = idx_keys.shape[0]
+    live0 = idx_keys != PADKEY
+    dead = live0 & drop[jnp.clip(idx_slots, 0, n - 1)]
+    live_b = live0 & ~dead
+
+    # sort the (tiny) insert batch; invalid lanes pad to its tail
+    ik = jnp.where(ins_valid, ins_keys, PADKEY)
+    order = jnp.argsort(ik)
+    ik, islot = ik[order], ins_slots[order]
+    ilive = ik != PADKEY
+    n_ins = jnp.sum(ilive.astype(jnp.int32))
+
+    # inserted entry -> rank in batch + surviving base keys below it;
+    # "surviving below" = sorted position in the ORIGINAL index minus the
+    # dropped entries before that position (prefix sum of ``dead``).
+    # searchsorted here is B queries into the pool-sized array: its
+    # binary-search while loop carries only BATCH-shaped state.
+    dead_cum0 = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                 jnp.cumsum(dead.astype(jnp.int32))])
+    p = jnp.searchsorted(idx_keys, ik).astype(jnp.int32)
+    rank_i = jnp.cumsum(ilive.astype(jnp.int32)) - 1
+    pos_i = jnp.where(ilive, rank_i + p - dead_cum0[p], n)
+
+    # surviving base entry -> rank among survivors + inserted keys below
+    # it (no ties: inserted keys are fresh).  NOT a pool-length-query
+    # searchsorted (whose lowering carries pool-shaped binary-search state
+    # through a while loop, copied every iteration on XLA CPU): since
+    # ``ik[i] < idx_keys[j]  <=>  p[i] <= j``, the count is the inclusive
+    # prefix sum of a batch-position histogram -- O(n) cumsum, zero
+    # pool-shaped loop state.
+    below_i = jnp.cumsum(jnp.zeros((n,), jnp.int32).at[
+        jnp.where(ilive & (p < n), p, n)].add(1, mode="drop"))
+    rank_b = jnp.cumsum(live_b.astype(jnp.int32)) - 1
+    pos_b = jnp.where(live_b, rank_b + below_i, n)
+
+    # pads fill the tail (dropped + original pads keep their slot value);
+    # each insert consumes one pad, so the surplus falls off the end
+    n_live = rank_b[-1] + 1 + n_ins
+    rank_p = jnp.cumsum((~live_b).astype(jnp.int32)) - 1
+    pos_p = jnp.where(~live_b, n_live + rank_p, n)
+
+    out_keys = jnp.full((n,), PADKEY, jnp.int32)
+    out_slots = jnp.zeros((n,), jnp.int32)
+    out_keys = out_keys.at[pos_b].set(idx_keys, mode="drop")
+    out_slots = out_slots.at[pos_b].set(idx_slots, mode="drop")
+    out_slots = out_slots.at[pos_p].set(idx_slots, mode="drop")
+    out_keys = out_keys.at[pos_i].set(ik, mode="drop")
+    out_slots = out_slots.at[pos_i].set(islot, mode="drop")
+    return out_keys, out_slots
 
 
 def alloc_slots(pool_keys: jax.Array, want_mask: jax.Array) -> jax.Array:

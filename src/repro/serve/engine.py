@@ -107,8 +107,9 @@ def _tick(est: engine_core.EngineState, params, tokens, valid,
           mcfg: ModelConfig, kv_cfg: PagedKVConfig,
           ecfg: engine_core.EngineConfig):
     """One fused engine tick, entirely on device: tier maintenance
-    (rate-limit + watermark compactions with payload-page mirroring), the
-    §5.3 read-triggered policy, then the decode step.  One dispatch.
+    (rate-limit + watermark compactions with payload-page mirroring) and
+    the §5.3 read-triggered policy as ONE bounded compaction loop, then
+    the decode step.  One dispatch.
 
     ``est.payload`` is the PagedKVState with its ``tier`` field stripped
     (the authoritative TierState lives in ``est.tier``)."""
@@ -116,9 +117,7 @@ def _tick(est: engine_core.EngineState, params, tokens, valid,
     kv = est.payload._replace(tier=est.tier)
     fpk = paged_kv.tail_page_keys(kv, kv_cfg)
     need = jnp.sum(valid.astype(jnp.int32))
-    est = engine_core.maintain(est, ecfg, need=need, mirror=mirror,
-                               force_pin_keys=fpk)
-    est = engine_core.read_policy(est, ecfg, mirror=mirror,
+    est = engine_core.maintenance(est, ecfg, need=need, mirror=mirror,
                                   force_pin_keys=fpk)
 
     kv = est.payload._replace(tier=est.tier)

@@ -97,6 +97,27 @@ def test_policy_transitions_under_jitted_step():
     assert db.counters["compactions"] > 0
 
 
+def test_policy_counts_scans_as_reads():
+    """A scan-only workload is read traffic: the DETECT window must count
+    scans in the read fraction (the engine advances the policy on scan
+    batches), so §5.3 triggers without a single get."""
+    pol = policy.PolicyConfig(epoch_ops=64, cooldown_ops=10**6,
+                              min_improvement=-1.0,     # epochs continue
+                              read_heavy_frac=0.5, slow_tracked_frac=0.2)
+    db = PrismDB(CFG, seed=0, pol_cfg=pol)
+    keys = np.arange(900, dtype=np.int32)
+    for i in range(0, 900, 100):                # push most keys to slow
+        db.put(keys[i:i + 100])
+    before = db.counters["compactions"]
+    phases = []
+    for _ in range(6):
+        db.scan_ops(np.arange(0, 640, 10, dtype=np.int32),
+                    np.full(64, 4, np.int32))
+        phases.append(int(db.pol.phase))
+    assert policy.ACTIVE in phases, phases
+    assert db.counters["compactions"] > before
+
+
 def test_policy_cooldown_blocks_read_compactions():
     pol = policy.PolicyConfig(epoch_ops=32, cooldown_ops=10**6,
                               min_improvement=2.0,
