@@ -72,6 +72,18 @@ def io_time_s(counters: dict, compaction_io: dict | None = None,
 
 FAST_WRITE_AMP = {"lsm": 3.0, "ra": 3.0, "mutant": 3.0}   # LSM NVM levels
 
+# Engine backend for every system the suite builds ("reference" |
+# "pallas"); set once by ``benchmarks.run --backend``.  The modeled-cost
+# rows must be bit-identical across backends (the ``kernels`` benchmark
+# and its claim check exactly that).
+DEFAULT_BACKEND = "reference"
+
+
+def set_backend(backend: str) -> None:
+    from repro.core import backend as backend_mod
+    global DEFAULT_BACKEND
+    DEFAULT_BACKEND = backend_mod.check(backend)
+
 
 def make_cfg(key_space=1 << 15, fast_frac=0.125, **kw) -> TierConfig:
     base = dict(
@@ -89,8 +101,13 @@ def make_cfg(key_space=1 << 15, fast_frac=0.125, **kw) -> TierConfig:
     return TierConfig(**base)
 
 
-def make_system(variant: str, cfg: TierConfig, seed: int = 0) -> PrismDB:
-    """Paper baselines (§7): prism / prism-precise / lsm / ra / mutant."""
+def make_system(variant: str, cfg: TierConfig, seed: int = 0,
+                backend: str | None = None) -> PrismDB:
+    """Paper baselines (§7): prism / prism-precise / lsm / ra / mutant.
+
+    ``backend=None`` -> the suite-wide ``DEFAULT_BACKEND`` (the
+    ``--backend`` flag)."""
+    backend = backend or DEFAULT_BACKEND
     # detect_ops: the §5.3 DETECT rate window.  Must be a few batches, not
     # the full epoch, so read-heavy phases register within a --quick
     # segment (the window slides past preload/write phases; see policy.py).
@@ -102,22 +119,24 @@ def make_system(variant: str, cfg: TierConfig, seed: int = 0) -> PrismDB:
                               read_heavy_frac=0.8, slow_tracked_frac=0.3,
                               detect_ops=1024)
     if variant == "prism":
-        return PrismDB(cfg, seed=seed, pol_cfg=pol)
+        return PrismDB(cfg, seed=seed, pol_cfg=pol, backend=backend)
     if variant == "prism-noprom":
-        return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False)
+        return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
+                       backend=backend)
     if variant == "prism-precise":
-        return PrismDB(cfg, seed=seed, pol_cfg=pol, precise=True)
+        return PrismDB(cfg, seed=seed, pol_cfg=pol, precise=True,
+                       backend=backend)
     if variant == "lsm":          # RocksDB het: no pinning, min-overlap,
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
                        selection="min_overlap", pin_mode="none",
-                       append_only=True)
+                       append_only=True, backend=backend)
     if variant == "ra":           # rocksdb-RA: pinning + naive selection
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
                        selection="min_overlap", pin_mode="object",
-                       append_only=True)
+                       append_only=True, backend=backend)
     if variant == "mutant":       # file-granularity placement on an LSM
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
-                       pin_mode="file", append_only=True)
+                       pin_mode="file", append_only=True, backend=backend)
     raise ValueError(variant)
 
 

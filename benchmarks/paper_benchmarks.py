@@ -101,7 +101,8 @@ def fig6_scoring_cpu(n_reps=20, seed=0):
     for nm, precise in (("fig6-score-approx", False),
                         ("fig6-score-precise", True)):
         fn = jax.jit(lambda rng: msc.select_range(
-            state, cfg, rng, precise=precise)[1])
+            state, cfg, rng, precise=precise,
+            backend=H.DEFAULT_BACKEND)[1])
         fn(jax.random.PRNGKey(seed))                  # compile
         t0 = time.time()
         for i in range(n_reps):
@@ -216,7 +217,8 @@ def fig11d_partitions(n_ops=8000, seed=0):
         cfg = H.make_cfg(key_space=KS // p, fast_frac=0.125, run_size=256,
                          max_runs=64, tracker_slots=max(KS // p // 5, 64),
                          n_buckets=32)
-        db = PartitionedDB(cfg, n_partitions=p, seed=seed)
+        db = PartitionedDB(cfg, n_partitions=p, seed=seed,
+                           backend=H.DEFAULT_BACKEND)
         rng = np.random.default_rng(seed)
         t0 = time.time()
         n = 0
@@ -308,6 +310,29 @@ def index_maintenance(n_ops=4096, seed=0):
     return rows
 
 
+# ------------------------------------------------- backend (kernel) parity
+
+def kernels_backend(n_ops=8000, seed=0):
+    """The same seeded YCSB-A segment through both engine backends:
+    ``kernels-reference`` (pure jnp) vs ``kernels-pallas`` (clock_update /
+    msc_score kernels, interpreter on CPU).  The kernels are exact
+    reimplementations, so every modeled-cost metric must be BIT-identical
+    across the two rows -- the ``kernels`` claim asserts it.  Wall time is
+    NOT compared (the interpreter is not the kernel's performance)."""
+    rows = []
+    ks = 1 << 12
+    cfg = H.make_cfg(key_space=ks, fast_frac=0.125, run_size=256,
+                     max_runs=32, tracker_slots=ks // 10, n_buckets=32)
+    n_batches = max(n_ops // BATCH, 2)
+    for backend in ("reference", "pallas"):
+        db = H.make_system("prism", cfg, seed=seed, backend=backend)
+        H.preload(db, ks, frac=0.5, seed=seed + 1)
+        r = H.run_workload(db, W.ycsb("A"), f"kernels-{backend}",
+                           n_batches=n_batches, batch=BATCH, seed=seed)
+        rows.append(r.row())
+    return rows
+
+
 # --------------------------------------------------------------- Fig. 12
 
 def fig12_power_of_k(n_ops=24000, seed=0):
@@ -332,6 +357,7 @@ ALL = {
     "fig10": fig10_zipf_sweep,
     "fig11b": fig11b_promotions,
     "index": index_maintenance,
+    "kernels": kernels_backend,
     "fig11c": fig11c_pinning_threshold,
     "fig11d": fig11d_partitions,
     "table5": table5_twitter,

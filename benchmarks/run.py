@@ -31,6 +31,13 @@ def main(argv=None) -> None:
                     help="fewer ops per benchmark")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed threaded through every benchmark")
+    ap.add_argument("--backend", default="reference",
+                    choices=("reference", "pallas"),
+                    help="engine backend for every system the suite "
+                         "builds; 'pallas' routes tracker updates, "
+                         "approx-MSC scoring and Movement replay through "
+                         "the kernels (interpreter on CPU).  Non-timing "
+                         "rows are bit-identical across backends")
     ap.add_argument("--json", default="BENCH_RESULTS.json",
                     help="output json path ('' disables)")
     ap.add_argument("--require", default="",
@@ -38,7 +45,9 @@ def main(argv=None) -> None:
                          "(exit 1 otherwise); see _validate for ids")
     args = ap.parse_args(argv)
 
+    from benchmarks import harness as H
     from benchmarks import paper_benchmarks as P
+    H.set_backend(args.backend)
     names = list(P.ALL) if not args.only else args.only.split(",")
     rows = []
     print("name,us_per_call,derived")
@@ -59,7 +68,7 @@ def main(argv=None) -> None:
         print(f"# {nm} done in {time.time() - t0:.1f}s", file=sys.stderr)
     if args.json:
         parsed = _parse(rows, deterministic=True)
-        parsed["_meta"] = {"seed": args.seed}
+        parsed["_meta"] = {"seed": args.seed, "backend": args.backend}
         with open(args.json, "w") as f:
             json.dump(parsed, f, indent=1, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
@@ -169,6 +178,16 @@ def _validate(rows):
               f"compactions={pr['compactions']:.0f} "
               f"slow_reads promote={pr['slow_read_objs']:.0f} "
               f"no={no['slow_read_objs']:.0f}")
+
+    if "kernels-reference" in d and "kernels-pallas" in d:
+        kr, kp = d["kernels-reference"], d["kernels-pallas"]
+        claim("kernels: pallas backend modeled cost bit-matches reference "
+              "(same seeded segment, exact kernel parity)",
+              kr == kp,
+              f"ref kops={kr['kops']:.1f} pallas kops={kp['kops']:.1f}; "
+              + ("all metrics equal" if kr == kp else "mismatch: " + str(
+                  {k: (kr.get(k), kp.get(k)) for k in set(kr) | set(kp)
+                   if kr.get(k) != kp.get(k)})))
 
     if "index-fused-ns17" in d and "index-fused-ns20" in d:
         w17 = d["index-fused-ns17"].get("wall_us_per_batch", 0)

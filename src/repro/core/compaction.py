@@ -64,7 +64,9 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
                  with_movement: bool = False,
                  force_pin_keys: jax.Array | None = None,
                  selection: str = "msc",
-                 pin_mode: str = "object"):
+                 pin_mode: str = "object",
+                 backend: str = "reference",
+                 interpret: bool | None = None):
     """One compaction.
 
     ``force_pin_keys``: optional sorted int32 array of keys that must never
@@ -76,6 +78,11 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
       selection: "msc" | "min_overlap" (RocksDB kMinOverlappingRatio)
       pin_mode:  "object" (PrismDB) | "none" (LSM: demote everything) |
                  "file" (Mutant: whole-range all-or-nothing placement)
+
+    ``backend``/``interpret`` statically route the approx-MSC candidate
+    scoring through the Pallas msc_score kernel (see ``msc.select_range``);
+    the Movement data plane itself is replayed by the payload MIRRORS,
+    which take the same knobs (tier_compact kernel).
     """
     cap_fast = cap_fast or 2 * cfg.run_size
     cap_slow = cap_slow or 2 * cfg.run_size * max(cfg.range_fanout_i, 1)
@@ -84,7 +91,9 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
     cand, scores, best = msc.select_range(state, cfg, r_sel, precise=precise,
                                           cap_fast=cap_fast,
                                           cap_slow=cap_slow,
-                                          selection=selection)
+                                          selection=selection,
+                                          backend=backend,
+                                          interpret=interpret)
     lo, hi = cand.lo[best], cand.hi[best]
     run_start, run_span = cand.run_start[best], cand.run_span[best]
 

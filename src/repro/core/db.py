@@ -38,7 +38,9 @@ class PrismDB:
                  pol_cfg: policy.PolicyConfig | None = None,
                  promote: bool = True, precise: bool = False,
                  selection: str = "msc", pin_mode: str = "object",
-                 append_only: bool = False, consolidate_every: int = 0):
+                 append_only: bool = False, consolidate_every: int = 0,
+                 backend: str = "reference",
+                 interpret: bool | None = None):
         """``append_only`` models LSM semantics for the baselines: every
         update appends a new version (memtable/L0), so fast-tier space is
         consumed by total write VOLUME, not unique keys -- compactions must
@@ -48,13 +50,19 @@ class PrismDB:
 
         ``consolidate_every``: rebuild the sorted indexes from scratch
         every N engine steps (hot paths maintain them incrementally; 0
-        disables the fallback, which is exact anyway)."""
+        disables the fallback, which is exact anyway).
+
+        ``backend``: "reference" (pure jnp, default) or "pallas" (route
+        tracker updates + approx-MSC scoring through the kernels);
+        ``interpret=None`` auto-picks the Pallas interpreter on CPU only.
+        """
         self.cfg = cfg
         self.append_only = append_only
         self.ecfg = EngineConfig(
             tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
             precise=precise, selection=selection, pin_mode=pin_mode,
-            append_only=append_only, consolidate_every=consolidate_every)
+            append_only=append_only, consolidate_every=consolidate_every,
+            backend=backend, interpret=interpret)
         self.estate = engine.init(self.ecfg, jax.random.PRNGKey(seed))
         self._step = engine.jit_step(self.ecfg)
         self._run = engine.jit_run_ops(self.ecfg)
@@ -207,11 +215,14 @@ class PartitionedDB:
 
     def __init__(self, cfg: TierConfig, n_partitions: int, seed: int = 0,
                  promote: bool = True,
-                 pol_cfg: policy.PolicyConfig | None = None):
+                 pol_cfg: policy.PolicyConfig | None = None,
+                 backend: str = "reference",
+                 interpret: bool | None = None):
         self.cfg = cfg
         self.p = n_partitions
         self.ecfg = EngineConfig(
-            tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote)
+            tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
+            backend=backend, interpret=interpret)
         rngs = jax.random.split(jax.random.PRNGKey(seed), n_partitions)
         self.estate = jax.vmap(
             functools.partial(engine.init, self.ecfg))(rngs)

@@ -156,15 +156,25 @@ def apply_grad(state: EmbedStoreState, token_slots: jax.Array,
     return state._replace(rows_fast=rows)
 
 
-def compact(state: EmbedStoreState, cfg: EmbedStoreConfig, rng: jax.Array):
+def compact(state: EmbedStoreState, cfg: EmbedStoreConfig, rng: jax.Array,
+            backend: str = "reference", interpret: bool | None = None):
     tier, stats, mv = compaction.compact_once(
-        state.tier, cfg.tier(), rng, promote=True, with_movement=True)
-    state = _apply_movement(state, cfg, mv)._replace(tier=tier)
+        state.tier, cfg.tier(), rng, promote=True, with_movement=True,
+        backend=backend, interpret=interpret)
+    state = _apply_movement(state, cfg, mv, backend=backend,
+                            interpret=interpret)._replace(tier=tier)
     return state, stats
 
 
 def _apply_movement(state: EmbedStoreState, cfg: EmbedStoreConfig,
-                    mv: Movement) -> EmbedStoreState:
+                    mv: Movement, backend: str = "reference",
+                    interpret: bool | None = None) -> EmbedStoreState:
+    if backend != "reference":
+        from repro.kernels.tier_compact.ops import apply_movement_rows
+        rows_fast, rows_slow = apply_movement_rows(
+            state.rows_fast, state.rows_slow, mv, backend=backend,
+            interpret=interpret)
+        return state._replace(rows_fast=rows_fast, rows_slow=rows_slow)
     ns = state.rows_slow.shape[0]
     src = jnp.clip(mv.m_src_slot, 0)
     rows_src = jnp.where((mv.m_src_tier == 0)[:, None],
@@ -183,10 +193,13 @@ def needs_compaction(state: EmbedStoreState, cfg: EmbedStoreConfig):
 
 # ----------------------------------------------------- engine-core driver
 
-def movement_mirror(cfg: EmbedStoreConfig):
-    """Engine-core mirror: replay compaction Movements on the row pools."""
+def movement_mirror(cfg: EmbedStoreConfig, backend: str = "reference",
+                    interpret: bool | None = None):
+    """Engine-core mirror: replay compaction Movements on the row pools
+    (``backend="pallas"`` -> the tier_compact kernel data plane)."""
     def mirror(payload: EmbedStoreState, mv: Movement) -> EmbedStoreState:
-        return _apply_movement(payload, cfg, mv)
+        return _apply_movement(payload, cfg, mv, backend=backend,
+                               interpret=interpret)
     return mirror
 
 
@@ -211,7 +224,8 @@ def prepare_step(est: engine.EngineState, cfg: EmbedStoreConfig,
     """Fused training-batch prepare: compaction headroom (with row-pool
     mirroring) + row promotion, one jitted dispatch.  Returns fast-pool
     slots for the token stream."""
-    mirror = movement_mirror(cfg)
+    mirror = movement_mirror(cfg, backend=ecfg.backend,
+                             interpret=ecfg.interpret)
     est = engine.maintain(est, ecfg, need=token_ids.shape[0], mirror=mirror)
     state = est.payload._replace(tier=est.tier)
     state, slots = prepare_batch(state, cfg, token_ids)

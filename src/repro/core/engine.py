@@ -36,6 +36,14 @@ Building blocks (all jit-/vmap-/scan-safe, static shapes):
 ``mirror(payload, movement) -> payload`` replays each compaction's
 ``Movement`` on the payload pools inside the same jitted step -- the
 tier_compact kernel's role on TPU.
+
+``EngineConfig.backend`` statically routes the three kernelized hot-path
+primitives -- tracker updates (clock_update), approx-MSC scoring
+(msc_score), and the mirrors' Movement replay (tier_compact) -- through
+``repro.kernels``; ``"reference"`` (default) traces the exact pre-
+dispatch jnp path, bit-identical HLO included.  The dispatch is resolved
+at trace time from the config (which keys every jit cache here), never
+from traced values.
 """
 from __future__ import annotations
 
@@ -46,6 +54,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import backend as backend_mod
 from repro.core import compaction, policy, tiers
 from repro.core.tiers import TierConfig, TierState
 
@@ -71,6 +80,15 @@ class EngineConfig(NamedTuple):
                                 # (0 = never: incremental maintenance is
                                 # exact; the fallback is hygiene for pad
                                 # entries, counted in ctr.consolidations)
+    backend: str = "reference"  # hot-path primitive dispatch: "reference"
+                                # (pure jnp) or "pallas" (clock_update /
+                                # msc_score / tier_compact kernels).
+                                # STATIC: resolved at trace time and keyed
+                                # by the config hash -- never a lax.cond
+                                # over pool state (PR 4 invariant)
+    interpret: bool | None = None  # Pallas interpret knob; None = auto
+                                # (interpreter on CPU, compiled on GPU/TPU
+                                # -- see core/backend.py)
 
 
 class EngineState(NamedTuple):
@@ -111,6 +129,7 @@ def dealias(tree):
 
 def init(cfg: EngineConfig, rng: jax.Array, payload: Any = (),
          tier: TierState | None = None) -> EngineState:
+    backend_mod.check(cfg.backend)
     return dealias(EngineState(
         tier=tier if tier is not None else tiers.init(cfg.tier),
         pol=policy.init(), rng=rng,
@@ -145,7 +164,8 @@ def _compact1(state: EngineState, cfg: EngineConfig,
     out = compaction.compact_once(
         state.tier, cfg.tier, rng=sub, promote=cfg.promote,
         precise=cfg.precise, selection=cfg.selection, pin_mode=cfg.pin_mode,
-        with_movement=mirror is not None, force_pin_keys=force_pin_keys)
+        with_movement=mirror is not None, force_pin_keys=force_pin_keys,
+        backend=cfg.backend, interpret=cfg.interpret)
     if mirror is None:
         tier, stats = out
         payload = state.payload
@@ -296,7 +316,8 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
     # one masked pass for the point lanes, sharing the index lookups
     tier, gvals, gfound, gsrc = tiers.apply_point_ops(
         state.tier, cfg.tier, op.keys, op.vals, op.valid,
-        is_put=is_put, is_get=is_get, is_del=is_del)
+        is_put=is_put, is_get=is_get, is_del=is_del,
+        backend=cfg.backend, interpret=cfg.interpret)
     # scan lane: zero-length windows unless this batch is a scan
     lens = jnp.where(is_scan, jnp.minimum(op.aux, cfg.scan_chunk), 0)
     tier, n_live = tiers.scan_batch(tier, cfg.tier, op.keys, lens,

@@ -204,11 +204,18 @@ def select_range(state: TierState, cfg: TierConfig, rng: jax.Array,
                  precise: bool = False,
                  cap_fast: int | None = None,
                  cap_slow: int | None = None,
-                 selection: str = "msc") -> tuple[Candidate, jax.Array,
-                                                  jax.Array]:
+                 selection: str = "msc",
+                 backend: str = "reference",
+                 interpret: bool | None = None) -> tuple[Candidate,
+                                                         jax.Array,
+                                                         jax.Array]:
     """Score k power-of-k candidates, return (candidates, scores, best_idx).
 
     selection: "msc" (the paper's metric) or "min_overlap" (LSM baseline).
+    ``backend`` statically routes the approx-MSC scoring (the every-
+    compaction-tick primitive, paper Fig. 6) through the Pallas msc_score
+    kernel; precise and min_overlap scoring are not kernelized (the paper
+    only optimizes the approximate path).
     """
     cand = candidate_ranges(state, cfg, rng)
     hist = tracker.clock_histogram(state.tracker)
@@ -224,6 +231,14 @@ def select_range(state: TierState, cfg: TierConfig, rng: jax.Array,
             lambda lo, hi, tf: precise_score(state, cfg, lo, hi, tf, probs,
                                              cf, cs))(cand.lo, cand.hi,
                                                       cand.t_f)
+    elif backend != "reference":
+        from repro.kernels.msc_score.ops import score_candidates
+        bhist = bucket_clock_hist(state, cfg)
+        scores = score_candidates(
+            cand.lo, cand.hi, cand.t_f, state.bucket_fast, state.bucket_slow,
+            state.bucket_overlap, bhist, probs,
+            bucket_width=max(cfg.key_space // cfg.n_buckets, 1),
+            backend=backend, interpret=interpret)
     else:
         bhist = bucket_clock_hist(state, cfg)
         scores = jax.vmap(

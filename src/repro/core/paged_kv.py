@@ -322,32 +322,52 @@ def tail_page_keys(state: PagedKVState, cfg: PagedKVConfig) -> jax.Array:
     return jnp.sort(keys)
 
 
-def movement_mirror(cfg: PagedKVConfig):
+def movement_mirror(cfg: PagedKVConfig, backend: str = "reference",
+                    interpret: bool | None = None):
     """Engine-core mirror: replay compaction Movements on the page pools.
 
     The payload may carry ``tier=None`` (the engine owns the authoritative
-    TierState); ``apply_movement`` only touches the payload pools."""
+    TierState); ``apply_movement`` only touches the payload pools.
+    ``backend="pallas"`` runs the replay through the tier_compact kernels."""
     def mirror(payload: PagedKVState, mv: Movement) -> PagedKVState:
-        return apply_movement(payload, cfg, mv)
+        return apply_movement(payload, cfg, mv, backend=backend,
+                              interpret=interpret)
     return mirror
 
 
 def compact(state: PagedKVState, cfg: PagedKVConfig, rng: jax.Array,
-            promote: bool = True):
+            promote: bool = True, backend: str = "reference",
+            interpret: bool | None = None):
     """One MSC compaction + payload movement mirror."""
     tier, stats, mv = compaction.compact_once(
         state.tier, cfg.tier(), rng, promote=promote, with_movement=True,
-        force_pin_keys=tail_page_keys(state, cfg))
-    state = apply_movement(state, cfg, mv)._replace(tier=tier)
+        force_pin_keys=tail_page_keys(state, cfg), backend=backend,
+        interpret=interpret)
+    state = apply_movement(state, cfg, mv, backend=backend,
+                           interpret=interpret)._replace(tier=tier)
     return state, stats
 
 
 def apply_movement(state: PagedKVState, cfg: PagedKVConfig,
-                   mv: Movement) -> PagedKVState:
+                   mv: Movement, backend: str = "reference",
+                   interpret: bool | None = None) -> PagedKVState:
     """Replay a compaction's physical moves on the page payload pools.
 
-    On TPU this is the tier_compact Pallas kernel + pinned-host DMA; here it
-    is the same dataflow in jnp (gather -> sequential scatter)."""
+    ``backend="pallas"`` runs the replay through the tier_compact data
+    movers (scalar-prefetched row DMAs: one conditional-source gather per
+    merged row, sequential run write, promotion scatter); the reference
+    path is the same dataflow in jnp (gather -> sequential scatter)."""
+    if backend != "reference":
+        from repro.kernels.tier_compact.ops import apply_movement_pools
+        pairs = [(state.k_fast, state.k_slow), (state.v_fast, state.v_slow),
+                 (state.kmax_fast, state.kmax_slow),
+                 (state.kmin_fast, state.kmin_slow)]
+        moved = [apply_movement_pools(f, s, mv, pool_axis=1, backend=backend,
+                                      interpret=interpret) for f, s in pairs]
+        (kf, ksl), (vf, vs), (kxf, kxs), (knf, kns) = moved
+        return state._replace(k_fast=kf, v_fast=vf, k_slow=ksl, v_slow=vs,
+                              kmax_fast=kxf, kmin_fast=knf, kmax_slow=kxs,
+                              kmin_slow=kns)
     pf, ps = cfg.fast_pages, cfg.slow_pages
     src_f = jnp.clip(mv.m_src_slot, 0)
     k_src = jnp.where((mv.m_src_tier == 0)[None, :, None, None, None],

@@ -161,7 +161,9 @@ def run_of_keys(state: TierState, keys: jax.Array) -> jax.Array:
 
 def apply_point_ops(state: TierState, cfg: TierConfig, keys: jax.Array,
                     vals: jax.Array, valid: jax.Array, *,
-                    is_put, is_get, is_del
+                    is_put, is_get, is_del,
+                    backend: str = "reference",
+                    interpret: bool | None = None
                     ) -> tuple[TierState, jax.Array, jax.Array, jax.Array]:
     """Branchless put/get/delete: one masked structure-of-arrays pass.
 
@@ -185,6 +187,10 @@ def apply_point_ops(state: TierState, cfg: TierConfig, keys: jax.Array,
     delete (paper §6): fast copies freed; keys that may survive on the
            slow tier leave a tombstone in the fast tier (cleared at
            compaction).
+
+    ``backend`` statically routes the tracker update (the per-access
+    §4.3 hot-path primitive) through the Pallas clock_update kernel;
+    the default traces exactly the reference path.
     """
     nf = state.fast_keys.shape[0]
     nb = cfg.n_buckets
@@ -259,9 +265,14 @@ def apply_point_ops(state: TierState, cfg: TierConfig, keys: jax.Array,
     source = jnp.where(fhit, 0, jnp.where(shit, 1, -1)).astype(jnp.int32)
 
     # ---- tracker --------------------------------------------------------
-    trk = tracker.access_batched(
-        state.tracker, keys, jnp.where(shit, 1, 0).astype(jnp.int8),
-        putk | (g & found))
+    trk_locs = jnp.where(shit, 1, 0).astype(jnp.int8)
+    trk_mask = putk | (g & found)
+    if backend == "reference":
+        trk = tracker.access_batched(state.tracker, keys, trk_locs, trk_mask)
+    else:
+        from repro.kernels.clock_update.ops import tracker_access
+        trk = tracker_access(state.tracker, keys, trk_locs, trk_mask,
+                             backend=backend, interpret=interpret)
 
     # ---- counters -------------------------------------------------------
     cnt = lambda m: jnp.sum(m.astype(jnp.int32))

@@ -83,11 +83,18 @@ def _kernel(keys_ref, occ_ref, locs_ref, valid_ref, tk_ref, tc_ref, tl_ref,
 
 
 def clock_update(trk_keys, trk_clock, trk_loc, keys, occ, locs, valid, *,
-                 tile: int = 512, interpret: bool = False):
-    """Apply one access batch to the tracker tables.  Returns new tables."""
+                 tile: int = 512, interpret: bool = False,
+                 table_size: int | None = None):
+    """Apply one access batch to the tracker tables.  Returns new tables.
+
+    ``table_size`` is the LOGICAL capacity used for slot hashing; it
+    defaults to the array length but may be smaller when the caller pads
+    the tables up to a tile multiple (padded rows can never be hashed to
+    — slots are always < table_size — so they pass through unchanged).
+    """
     t = trk_keys.shape[0]
     assert t % tile == 0
-    kern = functools.partial(_kernel, table_size=t, tile=tile)
+    kern = functools.partial(_kernel, table_size=table_size or t, tile=tile)
     grid = (t // tile,)
     return pl.pallas_call(
         kern,

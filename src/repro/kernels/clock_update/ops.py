@@ -6,26 +6,54 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.core import tracker
+from repro.core.tracker import _occ_large
 from repro.kernels.clock_update.clock_update import clock_update
 
 
 def _occurrences(keys, valid):
+    """Per-access count of its key in the batch (histogram path: the sort
+    + segment-sum is O(B log B) for every batch size — the old dense
+    ``[B, B]`` equality matrix was quadratic in what is supposed to be
+    the cheap path)."""
     sk = jnp.where(valid, keys, jnp.int32(-1))
-    if keys.shape[0] <= 512:
-        return jnp.sum((sk[None, :] == sk[:, None]) & valid[None, :], axis=1)
-    from repro.core.tracker import _occ_large
     return _occ_large(sk, valid)
+
+
+def _pick_tile(capacity: int, cap: int = 512) -> int:
+    """Largest divisor of the table size <= ``cap``, or ``cap`` itself
+    (with table padding, see ``tracker_access``) when the best divisor is
+    degenerate — a prime capacity must not collapse the grid to
+    one-slot tiles."""
+    for tile in range(min(cap, capacity), 0, -1):
+        if capacity % tile == 0:
+            break
+    return tile if tile >= min(64, capacity) else min(cap, capacity)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "tile", "interpret"))
 def tracker_access(state: tracker.TrackerState, keys, locs, valid, *,
-                   backend: str = "reference", tile: int = 512,
-                   interpret: bool = True) -> tracker.TrackerState:
+                   backend: str = "reference", tile: int | None = None,
+                   interpret: bool | None = None) -> tracker.TrackerState:
+    backend_mod.check(backend)
     if backend == "reference":
         return tracker.access_batched(state, keys, locs, valid)
+    interpret = backend_mod.resolve_interpret(interpret)
+    t = state.capacity
+    if tile is None:
+        tile = _pick_tile(t)
     occ = _occurrences(keys, valid).astype(jnp.int32)
-    tk, tc, tl = clock_update(state.keys, state.clock, state.loc,
-                              keys, occ, locs.astype(jnp.int8), valid,
-                              tile=tile, interpret=interpret)
-    return tracker.TrackerState(tk, tc, tl)
+    # pad the tables up to a tile multiple when the tile doesn't divide
+    # the capacity; slot hashing stays modulo the LOGICAL capacity, so
+    # padded rows are unreachable and pass through the kernel unchanged
+    pad = (-t) % tile
+    tk, tc, tl = state.keys, state.clock, state.loc
+    if pad:
+        tk = jnp.concatenate([tk, jnp.full((pad,), -1, tk.dtype)])
+        tc = jnp.concatenate([tc, jnp.zeros((pad,), tc.dtype)])
+        tl = jnp.concatenate([tl, jnp.zeros((pad,), tl.dtype)])
+    tk, tc, tl = clock_update(tk, tc, tl, keys, occ, locs.astype(jnp.int8),
+                              valid, tile=tile, interpret=interpret,
+                              table_size=t)
+    return tracker.TrackerState(tk[:t], tc[:t], tl[:t])

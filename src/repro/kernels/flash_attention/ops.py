@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.kernels.flash_attention.flash_attention import \
     flash_attention_folded
 from repro.kernels.flash_attention.ref import attention_ref
@@ -16,14 +17,16 @@ from repro.kernels.flash_attention.ref import attention_ref
                                              "interpret"))
 def mha(q, k, v, *, causal: bool = True, window: int = -1,
         backend: str = "reference", block_q: int = 256, block_k: int = 256,
-        interpret: bool = True):
+        interpret: bool | None = None):
     """Multi-head attention with GQA: q [B,Hq,Sq,D], k/v [B,Hkv,Sk,D].
 
     backend="reference": XLA-fused jnp path (used by model lowering on CPU);
-    backend="pallas": the TPU kernel (interpret=True on CPU).
+    backend="pallas": the TPU kernel (interpret=None auto-resolves to the
+    interpreter on CPU only).
     """
     if backend == "reference":
         return attention_ref(q, k, v, causal=causal, window=window)
+    interpret = backend_mod.resolve_interpret(interpret)
 
     b, hq, sq, d = q.shape
     hkv, sk = k.shape[1], k.shape[2]

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.kernels.mamba_scan.mamba_scan import mamba_scan
 from repro.kernels.mamba_scan.ref import mamba_ref
 
@@ -14,9 +15,10 @@ from repro.kernels.mamba_scan.ref import mamba_ref
                                              "interpret"))
 def selective_scan(x, dt, A, B, C, D, *, backend: str = "reference",
                    block_d: int = 256, chunk: int = 64,
-                   interpret: bool = True):
+                   interpret: bool | None = None):
     if backend == "reference":
         return mamba_ref(x, dt, A, B, C, D)
+    interpret = backend_mod.resolve_interpret(interpret)
     bb, t, di = x.shape
     bd = min(block_d, di)
     ch = min(chunk, t)

@@ -5,6 +5,7 @@ import functools
 
 import jax
 
+from repro.core import backend as backend_mod
 from repro.kernels.msc_score.msc_score import msc_scores
 from repro.kernels.msc_score.ref import msc_scores_ref
 
@@ -13,8 +14,10 @@ from repro.kernels.msc_score.ref import msc_scores_ref
                                              "interpret"))
 def score_candidates(lo, hi, t_f, bucket_fast, bucket_slow, bucket_overlap,
                      bhist, probs, *, bucket_width: int,
-                     backend: str = "reference", interpret: bool = True):
+                     backend: str = "reference",
+                     interpret: bool | None = None):
+    backend_mod.check(backend)
     fn = msc_scores_ref if backend == "reference" else functools.partial(
-        msc_scores, interpret=interpret)
+        msc_scores, interpret=backend_mod.resolve_interpret(interpret))
     return fn(lo, hi, t_f, bucket_fast, bucket_slow, bucket_overlap, bhist,
               probs, bucket_width=bucket_width)

@@ -6,20 +6,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.kernels.paged_attention.paged_attention import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "interpret"))
 def decode_attention(q, k_pages, v_pages, block_tables, token_mask, *,
-                     backend: str = "reference", interpret: bool = True):
+                     backend: str = "reference",
+                     interpret: bool | None = None):
     """Decode-step attention over selected KV pages.
 
     q: [B, Hq, D]; pools [P, T, Hkv, D]; block_tables [B, K];
     token_mask [B, K, T].  backend="reference" is the XLA path used in
-    model lowering; "pallas" is the TPU kernel (interpret on CPU)."""
+    model lowering; "pallas" is the TPU kernel (interpret=None
+    auto-resolves to the interpreter on CPU only)."""
     if backend == "reference":
         return paged_attention_ref(q, k_pages, v_pages, block_tables,
                                    token_mask)
     return paged_attention(q, k_pages, v_pages, block_tables, token_mask,
-                           interpret=interpret)
+                           interpret=backend_mod.resolve_interpret(interpret))

@@ -6,16 +6,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.kernels.rwkv6_scan.ref import rwkv6_ref
 from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "chunk", "interpret"))
 def wkv(r, k, v, w, u, *, backend: str = "reference", chunk: int = 64,
-        interpret: bool = True):
+        interpret: bool | None = None):
     """r,k,v,w: [B, H, T, D]; u: [H, D] -> [B, H, T, D]."""
     if backend == "reference":
         return rwkv6_ref(r, k, v, w, u)
+    interpret = backend_mod.resolve_interpret(interpret)
     b, h, t, d = r.shape
     pad = (-t) % chunk
     fold = lambda x: jnp.pad(

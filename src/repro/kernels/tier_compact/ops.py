@@ -6,32 +6,74 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tier_compact.ref import gather_rows_ref, scatter_rows_ref
-from repro.kernels.tier_compact.tier_compact import gather_rows, scatter_rows
+from repro.core import backend as backend_mod
+from repro.kernels.tier_compact.ref import (gather_rows_ref,
+                                            scatter_rows_ref,
+                                            select_gather_rows_ref)
+from repro.kernels.tier_compact.tier_compact import (gather_rows,
+                                                     scatter_rows,
+                                                     select_gather_rows)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "interpret"))
 def apply_movement_rows(fast_pool, slow_pool, mv, *,
-                        backend: str = "reference", interpret: bool = True):
+                        backend: str = "reference",
+                        interpret: bool | None = None):
     """Replay a compaction Movement on flat row pools [P, W].
 
     Returns (fast_pool', slow_pool').  This is the whole data path of one
     compaction: gather merged sources (random reads), sequential-write the
     new run into the slow pool, and promote hot rows back into fast slots.
-    """
-    gr = gather_rows_ref if backend == "reference" else \
-        functools.partial(gather_rows, interpret=interpret)
-    sc = scatter_rows_ref if backend == "reference" else \
-        (lambda pool, idx, rows, valid: scatter_rows(
-            pool, idx, rows, valid, interpret=interpret))
 
-    src = mv.m_src_slot
-    from_fast = gr(fast_pool, jnp.clip(src, 0, fast_pool.shape[0] - 1))
-    from_slow = gr(slow_pool, jnp.clip(src, 0, slow_pool.shape[0] - 1))
-    rows = jnp.where((mv.m_src_tier == 0)[:, None], from_fast, from_slow)
+    Each merged source row is read ONCE, from its own pool: the source
+    gather is a single pass over where-selected (pool-id, clipped-slot)
+    pairs (``select_gather_rows``), not a gather from both pools with a
+    post-hoc select.
+    """
+    backend_mod.check(backend)
+    if backend == "reference":
+        sel, gr, sc = (select_gather_rows_ref, gather_rows_ref,
+                       scatter_rows_ref)
+    else:
+        interpret = backend_mod.resolve_interpret(interpret)
+        sel = functools.partial(select_gather_rows, interpret=interpret)
+        gr = functools.partial(gather_rows, interpret=interpret)
+        sc = lambda pool, idx, rows, valid: scatter_rows(
+            pool, idx, rows, valid, interpret=interpret)
+
+    src_slow = mv.m_src_tier != 0
+    idx = jnp.where(src_slow,
+                    jnp.clip(mv.m_src_slot, 0, slow_pool.shape[0] - 1),
+                    jnp.clip(mv.m_src_slot, 0, fast_pool.shape[0] - 1))
+    rows = sel(fast_pool, slow_pool, src_slow, idx)
     # promotions read their ORIGINAL slow slots -- gather before the new run
     # overwrites recycled slots.
     pro = gr(slow_pool, jnp.clip(mv.p_src_slot, 0, slow_pool.shape[0] - 1))
     slow_pool = sc(slow_pool, mv.m_dst_slot, rows, mv.m_valid)
     fast_pool = sc(fast_pool, mv.p_dst_slot, pro, mv.p_valid)
     return fast_pool, slow_pool
+
+
+def apply_movement_pools(fast, slow, mv, *, pool_axis: int = 0,
+                         backend: str = "pallas",
+                         interpret: bool | None = None):
+    """``apply_movement_rows`` for payload arrays of any rank.
+
+    ``fast``/``slow`` carry their pool (slot) dimension at ``pool_axis``;
+    everything else is the per-object payload, flattened into row lanes
+    for the movers and restored afterwards.  This is how the paged-KV
+    pools ([L, P, T, H, D], pool_axis=1) and the embedding row store
+    ([P, dim], pool_axis=0) ride the same kernel data plane.
+    """
+    def to_rows(x):
+        x = jnp.moveaxis(x, pool_axis, 0)
+        return x.reshape(x.shape[0], -1), x.shape
+
+    def from_rows(rows, shape):
+        return jnp.moveaxis(rows.reshape(shape), 0, pool_axis)
+
+    frows, fshape = to_rows(fast)
+    srows, sshape = to_rows(slow)
+    frows, srows = apply_movement_rows(frows, srows, mv, backend=backend,
+                                       interpret=interpret)
+    return from_rows(frows, fshape), from_rows(srows, sshape)

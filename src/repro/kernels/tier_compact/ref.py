@@ -9,6 +9,16 @@ def gather_rows_ref(pool, idx):
     return pool[jnp.clip(idx, 0, pool.shape[0] - 1)]
 
 
+def select_gather_rows_ref(fast_pool, slow_pool, src_slow, idx):
+    """out[i] = (slow if src_slow[i] else fast)[idx[i]] (idx pre-clipped
+    into its selected pool; XLA has no two-pool gather primitive, so the
+    oracle gathers per pool and selects — the single-read formulation is
+    the Pallas kernel's job)."""
+    return jnp.where(src_slow[:, None],
+                     gather_rows_ref(slow_pool, idx),
+                     gather_rows_ref(fast_pool, idx))
+
+
 def scatter_rows_ref(pool, idx, rows, valid):
     """Write rows[i] -> pool[idx[i]] where valid[i] (idx unique)."""
     tgt = jnp.where(valid, idx, pool.shape[0])

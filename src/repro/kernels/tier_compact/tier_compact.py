@@ -7,10 +7,19 @@ kernels with scalar-prefetched indices, so the DMA for row i+1 issues
 while row i is in flight -- the TPU analogue of the paper's sequential
 flash writes (descriptor-friendly, no per-object host syscalls):
 
-  * gather_rows:  out[i] = pool[src_idx[i]]   (random read, streaming write)
-  * scatter_rows: pool[dst_idx[i]] = rows[i]  (streaming read, indexed write,
-                                               in-place via input/output
-                                               aliasing)
+  * gather_rows:       out[i] = pool[src_idx[i]]  (random read, streaming
+                                                   write)
+  * select_gather_rows: out[i] = pools[pid[i]][src_idx[i]] -- the merged-
+                        source gather of one compaction, where each row
+                        comes from EITHER the fast or the slow pool.  One
+                        conditional sliced DMA per row from the selected
+                        pool only (both pools stay in ANY/HBM space); the
+                        old formulation gathered every row from BOTH
+                        pools and selected afterwards, doubling the
+                        random-read bandwidth of the data plane.
+  * scatter_rows:      pool[dst_idx[i]] = rows[i] (streaming read, indexed
+                                                   write, in-place via
+                                                   input/output aliasing)
 
 Rows are whole page payloads (flattened [W] lanes, W % 128 == 0).
 """
@@ -41,6 +50,52 @@ def gather_rows(pool, idx, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((m, w), pool.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), pool)
+
+
+def _select_gather_kernel(pid_ref, idx_ref, fast_ref, slow_ref, out_ref,
+                          sem):
+    i = pl.program_id(0)
+    pid = pid_ref[i]
+    idx = idx_ref[i]
+
+    @pl.when(pid == 0)
+    def _():
+        dma = pltpu.make_async_copy(fast_ref.at[idx], out_ref, sem)
+        dma.start()
+        dma.wait()
+
+    @pl.when(pid != 0)
+    def _():
+        dma = pltpu.make_async_copy(slow_ref.at[idx], out_ref, sem)
+        dma.start()
+        dma.wait()
+
+
+def select_gather_rows(fast_pool, slow_pool, src_slow, idx, *,
+                       interpret: bool = False):
+    """out[i] = (slow if src_slow[i] else fast)[idx[i]]; pools [Pf/Ps, W].
+
+    ``idx`` must already be clipped into its SELECTED pool's bounds (the
+    caller where-selects the clip per pool id).  Both pools stay in ANY
+    memory space; each grid step issues exactly ONE row DMA, from the
+    selected pool — the data plane reads each merged source row once.
+    """
+    m = idx.shape[0]
+    w = fast_pool.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((None, w), lambda i, pid, idx: (i, 0)),
+        scratch_shapes=[pltpu.SemaphoreType.DMA],
+    )
+    return pl.pallas_call(
+        _select_gather_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, w), fast_pool.dtype),
+        interpret=interpret,
+    )(src_slow.astype(jnp.int32), idx.astype(jnp.int32), fast_pool,
+      slow_pool)
 
 
 def _scatter_kernel(idx_ref, rows_ref, pool_hbm_ref, pool_out_ref):

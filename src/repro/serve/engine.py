@@ -112,8 +112,11 @@ def _tick(est: engine_core.EngineState, params, tokens, valid,
     the decode step.  One dispatch.
 
     ``est.payload`` is the PagedKVState with its ``tier`` field stripped
-    (the authoritative TierState lives in ``est.tier``)."""
-    mirror = paged_kv.movement_mirror(kv_cfg)
+    (the authoritative TierState lives in ``est.tier``).  The maintenance
+    plane honors ``ecfg.backend``: approx-MSC scoring and the page-pool
+    Movement replay run through the Pallas kernels when "pallas"."""
+    mirror = paged_kv.movement_mirror(kv_cfg, backend=ecfg.backend,
+                                      interpret=ecfg.interpret)
     kv = est.payload._replace(tier=est.tier)
     fpk = paged_kv.tail_page_keys(kv, kv_cfg)
     need = jnp.sum(valid.astype(jnp.int32))
@@ -136,7 +139,8 @@ class ServeEngine:
     payload mirroring, policy, decode -- is one jitted ``_tick``."""
 
     def __init__(self, mcfg: ModelConfig, kv_cfg: PagedKVConfig, params,
-                 seed: int = 0, pol_cfg: policy.PolicyConfig | None = None):
+                 seed: int = 0, pol_cfg: policy.PolicyConfig | None = None,
+                 backend: str = "reference", interpret: bool | None = None):
         self.mcfg = mcfg
         self.cfg = kv_cfg
         self.params = params
@@ -144,7 +148,9 @@ class ServeEngine:
             epoch_ops=512, cooldown_ops=2048, read_heavy_frac=0.05,
             slow_tracked_frac=0.05)
         self.ecfg = engine_core.EngineConfig(tier=kv_cfg.tier(),
-                                             pol=self.pol_cfg)
+                                             pol=self.pol_cfg,
+                                             backend=backend,
+                                             interpret=interpret)
         kv = paged_kv.init(kv_cfg)
         self.est = engine_core.init(self.ecfg, jax.random.PRNGKey(seed),
                                     payload=kv._replace(tier=None),
