@@ -20,18 +20,26 @@ import numpy as np
 
 from repro import workloads as W
 from repro.core import PrismDB, TierConfig, policy
+from repro.obs import export as obs_export
+from repro.obs.cost import COST
+from repro.obs.state import ObsConfig
 
 
 # --------------------------------------------------------- device model
 
 @dataclass(frozen=True)
 class DeviceModel:
-    """Per-op service costs in microseconds (paper Table 1 + §2)."""
-    fast_read_us: float = 6.0        # Optane 4KB random read
-    fast_write_us: float = 10.0
-    slow_read_us: float = 391.0      # QLC 4KB random read
-    slow_seq_read_us_per_obj: float = 0.5    # ~2 GB/s sequential, 1KB objs
-    slow_seq_write_us_per_obj: float = 1.0   # ~1 GB/s sequential
+    """Per-op service costs in microseconds (paper Table 1 + §2).
+
+    The authoritative constants live in ``repro.obs.cost.CostModel`` --
+    the device-resident obs plane buckets per-op costs from the same
+    numbers, so the histogram quantiles and ``io_time_s`` can never
+    drift apart."""
+    fast_read_us: float = COST.fast_read_us        # Optane 4KB random read
+    fast_write_us: float = COST.fast_write_us
+    slow_read_us: float = COST.slow_read_us        # QLC 4KB random read
+    slow_seq_read_us_per_obj: float = COST.slow_seq_read_us_per_obj
+    slow_seq_write_us_per_obj: float = COST.slow_seq_write_us_per_obj
 
 
 DEVICES = DeviceModel()
@@ -108,6 +116,9 @@ def make_system(variant: str, cfg: TierConfig, seed: int = 0,
     ``backend=None`` -> the suite-wide ``DEFAULT_BACKEND`` (the
     ``--backend`` flag)."""
     backend = backend or DEFAULT_BACKEND
+    # the obs plane models each variant's fast-tier write amplification
+    # on device, so its histograms match io_time_s(fast_write_amp=...)
+    obs = ObsConfig(fast_write_amp=FAST_WRITE_AMP.get(variant, 1.0))
     # detect_ops: the §5.3 DETECT rate window.  Must be a few batches, not
     # the full epoch, so read-heavy phases register within a --quick
     # segment (the window slides past preload/write phases; see policy.py).
@@ -119,24 +130,26 @@ def make_system(variant: str, cfg: TierConfig, seed: int = 0,
                               read_heavy_frac=0.8, slow_tracked_frac=0.3,
                               detect_ops=1024)
     if variant == "prism":
-        return PrismDB(cfg, seed=seed, pol_cfg=pol, backend=backend)
+        return PrismDB(cfg, seed=seed, pol_cfg=pol, backend=backend,
+                       obs=obs)
     if variant == "prism-noprom":
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
-                       backend=backend)
+                       backend=backend, obs=obs)
     if variant == "prism-precise":
         return PrismDB(cfg, seed=seed, pol_cfg=pol, precise=True,
-                       backend=backend)
+                       backend=backend, obs=obs)
     if variant == "lsm":          # RocksDB het: no pinning, min-overlap,
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
                        selection="min_overlap", pin_mode="none",
-                       append_only=True, backend=backend)
+                       append_only=True, backend=backend, obs=obs)
     if variant == "ra":           # rocksdb-RA: pinning + naive selection
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
                        selection="min_overlap", pin_mode="object",
-                       append_only=True, backend=backend)
+                       append_only=True, backend=backend, obs=obs)
     if variant == "mutant":       # file-granularity placement on an LSM
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
-                       pin_mode="file", append_only=True, backend=backend)
+                       pin_mode="file", append_only=True, backend=backend,
+                       obs=obs)
     raise ValueError(variant)
 
 
@@ -167,6 +180,21 @@ class RunResult:
         disp_s = f";dispatches_per_kop={disp:.3f}" if disp is not None else ""
         scan_s = (f";scan_objs={c['scan_objs']}"
                   if c.get("scans", 0) else "")
+        tail_s = ""
+        if "p50_us" in self.extra:
+            # on-device histogram quantiles + the invariants the tail
+            # claim checks (mass == ops issued, events == compactions)
+            e = self.extra
+            tail_s = (f";p50_us={e['p50_us']:.3f};p99_us={e['p99_us']:.3f};"
+                      f"p999_us={e['p999_us']:.3f};"
+                      f"hist_mass={e['hist_mass']};"
+                      f"comp_events={e['comp_events']};"
+                      f"n_ops={self.n_ops}")
+        wall = self.extra.get("wall_us_per_dispatch")
+        # wall_* keys are wall-clock (nondeterministic): excluded from the
+        # deterministic JSON by benchmarks.run, shown in stdout rows only
+        wall_s = (f";wall_us_per_dispatch={wall:.1f}"
+                  if wall is not None else "")
         return (f"{self.name},{1e6 * self.service_s / max(self.n_ops, 1):.3f},"
                 f"kops={self.kops:.1f};io_s={self.io_s:.3f};"
                 f"cpu_s={self.compact_cpu_s:.3f};"
@@ -175,7 +203,7 @@ class RunResult:
                 f"fast_read_ratio={fast_ratio:.3f};"
                 f"compactions={c['compactions']};"
                 f"consolidations={c.get('consolidations', 0)}"
-                + scan_s + disp_s)
+                + scan_s + tail_s + disp_s + wall_s)
 
 
 def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
@@ -205,19 +233,37 @@ def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
         # second full XLA compile of the engine step
         n_warm = n_meas = min(n_warm, n_meas)
     db.reset_workload(seed=seed)
+    has_obs = getattr(db.ecfg, "obs", None) is not None \
+        and db.ecfg.obs.enabled
     t0 = time.time()
     if n_warm:
         db.run_workload(work, n_warm, batch)        # dispatch 1: warmup
     base_ctr = db.counters                          # sync at the boundary
+    base_obs = db.obs_snapshot() if has_obs else None
     base_disp = db.dispatches
+    t1 = time.time()
     db.run_workload(work, n_meas, batch)            # dispatch 2: measured
     jax.block_until_ready(db.estate)
-    wall = time.time() - t0
+    t2 = time.time()
+    wall = t2 - t0
     n_ops = n_meas * batch
     ctr = {k: v - base_ctr.get(k, 0) for k, v in db.counters.items()}
     disp = db.dispatches - base_disp
     io = io_time_s(ctr, fast_write_amp=fast_write_amp)
-    extra = {"dispatches_per_kop": 1e3 * disp / max(n_ops, 1)}
+    extra = {"dispatches_per_kop": 1e3 * disp / max(n_ops, 1),
+             "wall_us_per_dispatch": 1e6 * (t2 - t1) / max(disp, 1)}
+    if has_obs:
+        # measured-segment delta of the device-resident histograms ->
+        # tail percentiles; all inputs are integers, so the estimates
+        # are bit-identical across backends (the kernels claim pins it)
+        snap = db.obs_snapshot()
+        hd = obs_export.hist_delta(snap, base_obs)
+        extra.update(obs_export.quantiles_from_hist(hd))
+        extra["p50_us"] = extra.pop("p50")
+        extra["p99_us"] = extra.pop("p99")
+        extra["p999_us"] = extra.pop("p999")
+        extra["hist_mass"] = int(hd.sum())
+        extra["comp_events"] = snap["ev_count"] - base_obs["ev_count"]
     return RunResult(name=name, n_ops=n_ops, wall_s=wall,
                      compact_cpu_s=0.0, io_s=io, counters=ctr, extra=extra)
 

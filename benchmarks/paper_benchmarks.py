@@ -333,6 +333,30 @@ def kernels_backend(n_ops=8000, seed=0):
     return rows
 
 
+# ------------------------------------------------------ tail latency
+
+def tail_latency(n_ops=24000, seed=0):
+    """Read tail latency as a first-class metric (the paper's headline
+    claim is a 2x p99 improvement; ROADMAP item).  p50/p99/p999 of the
+    modeled per-op service cost, estimated from the DEVICE-RESIDENT
+    log2 histograms the obs plane maintains inside the fused engine
+    step -- compaction stalls land in the same step's bucket, so the
+    tail is exactly the batches that waited on maintenance I/O.
+
+    Scenarios: read-only steady state (ycsbC), a flash crowd (sudden
+    hot-set concentration), and delete churn (tombstone pressure keeps
+    the maintenance plane busy).  The ``tail`` claim checks the two
+    conservation invariants: histogram mass == ops issued, and the
+    compaction event-ring count == the compactions counter."""
+    rows = []
+    for wk, nm in (("C", "tail-ycsbC"),
+                   ("flash-crowd", "tail-flash-crowd"),
+                   ("delete-churn", "tail-delete-churn")):
+        r = _run("prism", wk, n_ops=n_ops, name=nm, seed=seed)
+        rows.append(r.row())
+    return rows
+
+
 # --------------------------------------------------------------- Fig. 12
 
 def fig12_power_of_k(n_ops=24000, seed=0):
@@ -362,4 +386,45 @@ ALL = {
     "fig11d": fig11d_partitions,
     "table5": table5_twitter,
     "fig12": fig12_power_of_k,
+    "tail": tail_latency,
 }
+
+
+def expected_rows() -> dict:
+    """Row names each registry benchmark emits, keyed by benchmark.
+
+    This is the ``--check-rows`` freshness oracle: every row in a
+    BENCH_RESULTS.json must be produced by some benchmark in ``ALL``,
+    so rows from never-landed or renamed benchmarks can't silently ship
+    in the tracked file.  Kept literal (mirroring each function's name
+    loops) so a rename here and not there -- or vice versa -- fails the
+    guard AND tests/test_bench_results.py."""
+    names = {
+        "table2": ["tbl2-nvm-only", "tbl2-qlc-only", "tbl2-het-lsm",
+                   "tbl2-het-prism"],
+        "fig6": ["fig6-rocksdb", "fig6-precise-msc", "fig6-approx-msc"],
+        "fig6cpu": ["fig6-score-approx", "fig6-score-precise"],
+        "fig8": [f"fig8-{v}-het{int(ff * 100)}"
+                 for ff in (0.05, 0.125, 0.25, 0.5)
+                 for v in ("lsm", "prism")],
+        "fig9": [f"fig9-{v}-ycsb{wk}" for wk in ("A", "B", "C", "D", "F")
+                 for v in ("prism", "lsm", "ra", "mutant")],
+        "ycsb": [f"ycsb-{wk}" for wk in W.YCSB_KINDS],
+        "scenarios": [f"scenario-{sc}" for sc in W.SCENARIOS],
+        "fig10": [f"fig10-{v}-zipf{z if z else 'U'}"
+                  for z in (0.6, 0.8, 0.99, 1.2, 0.0)
+                  for v in ("prism", "lsm")],
+        "fig11b": ["fig11b-no-promote", "fig11b-promote"],
+        "index": [f"index-{kind}-{nm}" for kind in ("put", "fused")
+                  for nm in ("ns17", "ns20")],
+        "kernels": ["kernels-reference", "kernels-pallas"],
+        "fig11c": [f"fig11c-ycsb{wk}-pin{int(t * 100)}"
+                   for wk in ("A", "B") for t in (0.1, 0.4, 0.7, 0.9)],
+        "fig11d": [f"fig11d-partitions{p}" for p in (1, 2, 4, 8)],
+        "table5": [f"tbl5-{v}-{cl}" for cl in W.TWITTER_CLUSTERS
+                   for v in ("prism", "lsm")],
+        "fig12": [f"fig12-k{k}" for k in (1, 2, 8, 32)],
+        "tail": ["tail-ycsbC", "tail-flash-crowd", "tail-delete-churn"],
+    }
+    assert set(names) == set(ALL), "expected_rows out of sync with ALL"
+    return names

@@ -19,6 +19,8 @@ from repro.core import engine, policy, tiers
 from repro.core.engine import EngineConfig, OpBatch
 from repro.core.tiers import TierConfig
 from repro.core.utils import hash_mod
+from repro.obs import export as obs_export
+from repro.obs.state import ObsConfig
 
 
 class PrismDB:
@@ -40,7 +42,8 @@ class PrismDB:
                  selection: str = "msc", pin_mode: str = "object",
                  append_only: bool = False, consolidate_every: int = 0,
                  backend: str = "reference",
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 obs: ObsConfig | None = None):
         """``append_only`` models LSM semantics for the baselines: every
         update appends a new version (memtable/L0), so fast-tier space is
         consumed by total write VOLUME, not unique keys -- compactions must
@@ -62,7 +65,8 @@ class PrismDB:
             tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
             precise=precise, selection=selection, pin_mode=pin_mode,
             append_only=append_only, consolidate_every=consolidate_every,
-            backend=backend, interpret=interpret)
+            backend=backend, interpret=interpret,
+            obs=obs if obs is not None else ObsConfig())
         self.estate = engine.init(self.ecfg, jax.random.PRNGKey(seed))
         self._step = engine.jit_step(self.ecfg)
         self._run = engine.jit_run_ops(self.ecfg)
@@ -167,6 +171,12 @@ class PrismDB:
     def occupancy(self) -> float:
         return float(tiers.fast_occupancy(self.estate.tier))
 
+    def obs_snapshot(self) -> dict:
+        """Host snapshot of the device-resident observability plane
+        (latency histograms, counter timeline, compaction events); one
+        readback, introspection only."""
+        return obs_export.snapshot(self.estate.obs)
+
 
 def route_batch(keys: jax.Array, p: int, per_part: int
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -217,12 +227,14 @@ class PartitionedDB:
                  promote: bool = True,
                  pol_cfg: policy.PolicyConfig | None = None,
                  backend: str = "reference",
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 obs: ObsConfig | None = None):
         self.cfg = cfg
         self.p = n_partitions
         self.ecfg = EngineConfig(
             tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
-            backend=backend, interpret=interpret)
+            backend=backend, interpret=interpret,
+            obs=obs if obs is not None else ObsConfig())
         rngs = jax.random.split(jax.random.PRNGKey(seed), n_partitions)
         self.estate = jax.vmap(
             functools.partial(engine.init, self.ecfg))(rngs)
@@ -298,3 +310,9 @@ class PartitionedDB:
     def counters(self) -> dict:
         return {k: [int(x) for x in v]
                 for k, v in self.estate.tier.ctr._asdict().items()}
+
+    def obs_snapshot(self) -> dict:
+        """Merged cross-partition snapshot: the vmapped per-partition
+        histograms sum (the reason the obs plane uses histograms, not
+        reservoirs); timelines/event rings stay per partition."""
+        return obs_export.snapshot(self.estate.obs)

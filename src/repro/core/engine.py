@@ -57,6 +57,8 @@ from jax import lax
 from repro.core import backend as backend_mod
 from repro.core import compaction, policy, tiers
 from repro.core.tiers import TierConfig, TierState
+from repro.obs import state as obs_plane
+from repro.obs.state import ObsConfig
 
 PUT, GET, DELETE, SCAN = 0, 1, 2, 3
 
@@ -89,6 +91,10 @@ class EngineConfig(NamedTuple):
     interpret: bool | None = None  # Pallas interpret knob; None = auto
                                 # (interpreter on CPU, compiled on GPU/TPU
                                 # -- see core/backend.py)
+    obs: ObsConfig = ObsConfig()  # device-resident observability plane;
+                                # static (hashable) so enabled/sizes key
+                                # the jit caches.  The ObsState rides in
+                                # EngineState: zero extra dispatches
 
 
 class EngineState(NamedTuple):
@@ -99,6 +105,7 @@ class EngineState(NamedTuple):
     virtual_extra: jax.Array    # i32: append-only phantom fast-tier fill
     steps: jax.Array            # i32: engine steps (consolidation clock)
     payload: Any = ()           # pytree mirrored through compactions
+    obs: Any = ()               # ObsState when cfg.obs.enabled, else ()
 
 
 class OpBatch(NamedTuple):
@@ -134,7 +141,8 @@ def init(cfg: EngineConfig, rng: jax.Array, payload: Any = (),
         tier=tier if tier is not None else tiers.init(cfg.tier),
         pol=policy.init(), rng=rng,
         virtual_extra=jnp.zeros((), jnp.int32),
-        steps=jnp.zeros((), jnp.int32), payload=payload))
+        steps=jnp.zeros((), jnp.int32), payload=payload,
+        obs=obs_plane.init(cfg.obs) if cfg.obs.enabled else ()))
 
 
 def make_op(kind: int, keys: jax.Array, vals: jax.Array | None = None,
@@ -158,8 +166,10 @@ def make_op(kind: int, keys: jax.Array, vals: jax.Array | None = None,
 
 def _compact1(state: EngineState, cfg: EngineConfig,
               mirror: MirrorFn | None,
-              force_pin_keys: jax.Array | None) -> EngineState:
-    """One compaction + payload mirroring + append-only fill accounting."""
+              force_pin_keys: jax.Array | None,
+              trigger: jax.Array | None = None) -> EngineState:
+    """One compaction + payload mirroring + append-only fill accounting
+    (+ one observability event when the obs plane is enabled)."""
     rng, sub = jax.random.split(state.rng)
     out = compaction.compact_once(
         state.tier, cfg.tier, rng=sub, promote=cfg.promote,
@@ -178,8 +188,15 @@ def _compact1(state: EngineState, cfg: EngineConfig,
         # merged duplicates: decay by the measured superseded-copy count,
         # not by key-range coverage (which decayed even on no-op merges).
         ve = jnp.maximum(ve - stats.n_superseded, 0)
+    obs = state.obs
+    if cfg.obs.enabled:
+        obs = obs_plane.record_compaction(
+            obs, cfg.obs, step=state.steps,
+            trigger=(jnp.int32(obs_plane.TRIG_POLICY)
+                     if trigger is None else trigger),
+            stats=stats)
     return state._replace(tier=tier, rng=rng, virtual_extra=ve,
-                          payload=payload)
+                          payload=payload, obs=obs)
 
 
 def maintenance(state: EngineState, cfg: EngineConfig, *,
@@ -234,7 +251,17 @@ def maintenance(state: EngineState, cfg: EngineConfig, *,
 
     def body(carry):
         s, rounds = carry
-        return _compact1(s, cfg, mirror, force_pin_keys), rounds + 1
+        # priority-encoded trigger kind for the obs event ring, mirroring
+        # the cond's disjunct order: a compaction freeing write headroom
+        # is a rate-limit stall even if the watermark is also armed
+        occ = tiers.fast_occupancy(s.tier)
+        trig = jnp.where(
+            usable(s) < need, jnp.int32(obs_plane.TRIG_RATE_LIMIT),
+            jnp.where(wm0 & (occ >= cfg.tier.low_watermark),
+                      jnp.int32(obs_plane.TRIG_WATERMARK),
+                      jnp.int32(obs_plane.TRIG_POLICY)))
+        return (_compact1(s, cfg, mirror, force_pin_keys, trigger=trig),
+                rounds + 1)
 
     state, _ = lax.while_loop(cond, body,
                               (state, jnp.zeros((), jnp.int32)))
@@ -303,6 +330,7 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
     is_get = op.kind == GET
     is_del = op.kind == DELETE
     is_scan = op.kind == SCAN
+    ctr0 = state.tier.ctr  # counter baseline for the obs step record
 
     # ONE pre-op maintenance loop: §4.2 rate limit for this batch's
     # writes, watermark hysteresis (armed at every step boundary: the
@@ -336,6 +364,14 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
     state = state._replace(steps=state.steps + 1)
     if cfg.consolidate_every > 0:
         state = _consolidation_tick(state, cfg)
+
+    if cfg.obs.enabled:
+        # the delta spans the whole step -- maintenance included, so a
+        # batch that stalled behind compactions lands in a tail bucket
+        state = state._replace(obs=obs_plane.record_step(
+            state.obs, cfg.obs, kind=op.kind,
+            n_ops=jnp.sum(op.valid.astype(jnp.int32)),
+            delta=obs_plane.counter_delta(state.tier.ctr, ctr0)))
 
     b, v = op.vals.shape
     res = OpResult(

@@ -1,0 +1,66 @@
+"""Modeled per-op service costs (paper Table 1 + §2), shared between the
+device-resident observability plane and the benchmark harness.
+
+The constants are STATIC (a hashable NamedTuple inside ``ObsConfig``
+inside ``EngineConfig``), so they key every jit cache and the on-device
+cost arithmetic is closure constants -- never traced values.  The
+attribution mirrors ``benchmarks.harness.io_time_s`` exactly: client
+point ops are random I/O, compaction and range-scan slow reads are
+sequential (runs are key-sorted), and ``fast_write_amp`` models the
+LSM baselines' NVM-internal rewrite work (amp ~ 3 for het-LSM; PrismDB's
+slab layout updates in place, amp = 1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CostModel(NamedTuple):
+    """Per-op service costs in microseconds (paper Table 1)."""
+    fast_read_us: float = 6.0                # Optane 4KB random read
+    fast_write_us: float = 10.0
+    slow_read_us: float = 391.0              # QLC 4KB random read
+    slow_seq_read_us_per_obj: float = 0.5    # ~2 GB/s sequential, 1KB objs
+    slow_seq_write_us_per_obj: float = 1.0   # ~1 GB/s sequential
+
+
+COST = CostModel()
+
+
+def step_io_us(delta: "Counters", cost: CostModel,  # noqa: F821
+               fast_write_amp: float = 1.0) -> jax.Array:
+    """Modeled I/O microseconds of one engine step from its COUNTER DELTAS
+    (a ``Counters`` pytree of per-step increments).  All-scalar f32
+    arithmetic on i32 deltas: bit-reproducible across backends.
+
+    ``comp_reads`` and ``scan_reads`` are maintained on device as subsets
+    of ``slow_reads``; the remainder is client random reads.
+    """
+    seq = (delta.comp_reads + delta.scan_reads).astype(jnp.float32)
+    client_slow = jnp.maximum(
+        delta.slow_reads.astype(jnp.float32) - seq, 0.0)
+    return (delta.fast_reads.astype(jnp.float32) * cost.fast_read_us
+            + delta.fast_writes.astype(jnp.float32)
+            * (cost.fast_write_us * fast_write_amp)
+            + client_slow * cost.slow_read_us
+            + seq * cost.slow_seq_read_us_per_obj
+            + delta.slow_writes.astype(jnp.float32)
+            * cost.slow_seq_write_us_per_obj)
+
+
+def compaction_io_us(stats: "CompactionStats", cost: CostModel,  # noqa: F821
+                     fast_write_amp: float = 1.0) -> jax.Array:
+    """Modeled I/O microseconds of ONE compaction, attributed exactly as
+    ``compact_once`` charges its counters: the run window read + the new
+    runs written are sequential slow I/O; demotions read the fast tier,
+    promotions write it."""
+    return (stats.n_run_read.astype(jnp.float32)
+            * cost.slow_seq_read_us_per_obj
+            + stats.n_run_written.astype(jnp.float32)
+            * cost.slow_seq_write_us_per_obj
+            + stats.n_demoted.astype(jnp.float32) * cost.fast_read_us
+            + stats.n_promoted.astype(jnp.float32)
+            * (cost.fast_write_us * fast_write_amp))

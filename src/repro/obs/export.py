@@ -1,0 +1,200 @@
+"""Host-side export of the device-resident ``ObsState``.
+
+Everything here runs OUTSIDE jit, at segment boundaries: one
+``jax.device_get`` pulls the whole (small, fixed-size) pytree, then
+plain numpy turns it into structured dicts, percentile estimates, and
+JSON-lines.  The numpy bucket function is a bit-exact mirror of the
+device one so the quantile tests can use an exact oracle.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, Mapping, Sequence
+
+import jax
+import numpy as np
+
+from repro.obs.state import (KIND_NAMES, N_KINDS, TRIGGER_NAMES,
+                             ObsState)
+
+QUANTILES = (0.5, 0.99, 0.999)
+QUANTILE_NAMES = {0.5: "p50", 0.99: "p99", 0.999: "p999"}
+
+
+def bucket_of_us_np(us, n_buckets: int):
+    """Numpy mirror of ``state.bucket_of_us``: ceil(log2) read off the
+    f32 bit pattern -- integer ops only, so it is bit-identical to the
+    device version on every input (no libm involved)."""
+    us = np.maximum(np.asarray(us, np.float32), np.float32(1e-6))
+    bits = np.asarray(us, np.float32).view(np.int32)
+    b = (bits >> 23) - 127 + (bits & 0x7FFFFF != 0).astype(np.int32)
+    return np.clip(b, 0, n_buckets - 1)
+
+
+def bucket_bounds(n_buckets: int):
+    """(lo, hi) arrays in us: bucket 0 is (0, 1], bucket b is
+    (2^(b-1), 2^b]; the top bucket also absorbs overflow."""
+    b = np.arange(n_buckets)
+    hi = np.exp2(b).astype(np.float64)
+    lo = np.where(b == 0, 0.0, np.exp2(b - 1.0))
+    return lo, hi
+
+
+def quantile_from_hist(hist: np.ndarray, q: float) -> float:
+    """Estimate the q-quantile of the per-op costs summarised by one
+    histogram row: rank = ceil(q * N) (1-based, so p999 of 1000 ops is
+    the worst op), find its bucket by cumulative count, interpolate
+    linearly inside the bucket's (lo, hi] bounds.  Returns 0.0 for an
+    empty histogram."""
+    hist = np.asarray(hist, np.int64)
+    n = int(hist.sum())
+    if n == 0:
+        return 0.0
+    rank = int(np.ceil(q * n))
+    rank = min(max(rank, 1), n)
+    cum = np.cumsum(hist)
+    b = int(np.searchsorted(cum, rank, side="left"))
+    lo, hi = bucket_bounds(hist.shape[0])
+    before = int(cum[b - 1]) if b > 0 else 0
+    frac = (rank - before) / float(hist[b])
+    return float(lo[b] + (hi[b] - lo[b]) * frac)
+
+
+def quantiles_from_hist(hist: np.ndarray,
+                        qs: Sequence[float] = QUANTILES) -> dict:
+    """{"p50": ..., "p99": ..., "p999": ...} for one histogram row (or a
+    [kinds, buckets] matrix, which is first summed over kinds)."""
+    hist = np.asarray(hist)
+    if hist.ndim == 2:
+        hist = hist.sum(axis=0)
+    return {QUANTILE_NAMES.get(q, f"p{q}"): quantile_from_hist(hist, q)
+            for q in qs}
+
+
+def snapshot(obs: ObsState) -> dict:
+    """One device_get -> plain numpy dict.  Handles both a scalar
+    engine's ObsState and a vmapped/stacked one (leading partition dim
+    on every leaf): stacked states are merged -- histograms, ring
+    positions and event counts by summation (the reason histograms were
+    chosen over reservoirs), timelines and event rings kept per
+    partition under ``per_partition``."""
+    host = jax.device_get(obs)
+    hist = np.asarray(host.hist)
+    stacked = hist.ndim == 3
+    t_pos = np.asarray(host.t_pos).reshape(-1)
+    ev_count = np.asarray(host.ev_count).reshape(-1)
+    snap = {
+        "hist": hist.sum(axis=0) if stacked else hist,
+        "t_pos": int(t_pos.sum()),
+        "ev_count": int(ev_count.sum()),
+        "t_pos_per_part": t_pos,
+        "ev_count_per_part": ev_count,
+        "timeline": np.asarray(host.timeline),
+        "ev_step": np.asarray(host.ev_step),
+        "ev_trigger": np.asarray(host.ev_trigger),
+        "ev_score": np.asarray(host.ev_score),
+        "ev_moved": np.asarray(host.ev_moved),
+        "ev_superseded": np.asarray(host.ev_superseded),
+        "ev_io_us": np.asarray(host.ev_io_us),
+        "n_partitions": hist.shape[0] if stacked else 1,
+    }
+    return snap
+
+
+def hist_delta(after: Mapping, before: Mapping) -> np.ndarray:
+    return np.asarray(after["hist"], np.int64) - np.asarray(
+        before["hist"], np.int64)
+
+
+def _ring_order(count: int, length: int) -> np.ndarray:
+    """Valid indices of a ring with ``count`` total writes, oldest
+    first."""
+    if count <= length:
+        return np.arange(count)
+    start = count % length
+    return np.concatenate([np.arange(start, length), np.arange(start)])
+
+
+def events_table(snap: Mapping) -> list:
+    """Compaction events (oldest surviving first) as dicts; for a
+    partitioned snapshot, per-partition rings are flattened with a
+    ``partition`` field."""
+    ev_step = np.asarray(snap["ev_step"])
+    if ev_step.ndim == 1:
+        ev_step = ev_step[None]
+    parts = ev_step.shape[0]
+    rows = []
+    for p in range(parts):
+        def leaf(name):
+            a = np.asarray(snap[name])
+            return a[p] if a.ndim > 1 else a
+        step, trig = leaf("ev_step"), leaf("ev_trigger")
+        score, moved = leaf("ev_score"), leaf("ev_moved")
+        sup, io = leaf("ev_superseded"), leaf("ev_io_us")
+        per = np.asarray(snap.get("ev_count_per_part",
+                                  snap["ev_count"])).reshape(-1)
+        count = int(per[p]) if per.size > 1 else int(snap["ev_count"])
+        for i in _ring_order(count, step.shape[0]):
+            rows.append({
+                "partition": p,
+                "step": int(step[i]),
+                "trigger": TRIGGER_NAMES[int(trig[i])],
+                "msc_score": float(score[i]),
+                "moved": int(moved[i]),
+                "superseded": int(sup[i]),
+                "io_us": float(io[i]),
+            })
+    return rows
+
+
+def timeline_table(snap: Mapping) -> list:
+    """Per-step counter-delta rows (oldest surviving first)."""
+    from repro.obs.state import TIMELINE_FIELDS  # lazy: cycle breaker
+    tl = np.asarray(snap["timeline"])
+    if tl.ndim == 2:
+        tl = tl[None]
+    rows = []
+    for p in range(tl.shape[0]):
+        per = np.asarray(snap.get("t_pos_per_part",
+                                  snap["t_pos"])).reshape(-1)
+        count = int(per[p]) if per.size > 1 else int(snap["t_pos"])
+        for i in _ring_order(count, tl.shape[1]):
+            row = {"partition": p}
+            row.update({f: int(v) for f, v in zip(TIMELINE_FIELDS,
+                                                  tl[p, i])})
+            rows.append(row)
+    return rows
+
+
+def to_records(snap: Mapping, meta: Mapping | None = None) -> Iterable[dict]:
+    """Flatten a snapshot into JSON-able records (one per line in the
+    JSONL export): a meta header, one histogram record per op kind plus
+    the total, then timeline and compaction-event rows."""
+    yield {"record": "meta", "t_pos": snap["t_pos"],
+           "ev_count": snap["ev_count"],
+           "n_partitions": snap.get("n_partitions", 1),
+           **dict(meta or {})}
+    hist = np.asarray(snap["hist"])
+    for k in range(N_KINDS):
+        if hist[k].sum() == 0:
+            continue
+        yield {"record": "hist", "kind": KIND_NAMES[k],
+               "counts": hist[k].tolist(),
+               **quantiles_from_hist(hist[k])}
+    yield {"record": "hist", "kind": "total",
+           "counts": hist.sum(axis=0).tolist(),
+           **quantiles_from_hist(hist)}
+    for row in timeline_table(snap):
+        yield {"record": "step", **row}
+    for row in events_table(snap):
+        yield {"record": "compaction", **row}
+
+
+def write_jsonl(path, snap: Mapping, meta: Mapping | None = None) -> int:
+    """Write the snapshot as JSON-lines; returns the record count."""
+    n = 0
+    with open(path, "w") as fh:
+        for rec in to_records(snap, meta):
+            fh.write(json.dumps(rec) + "\n")
+            n += 1
+    return n

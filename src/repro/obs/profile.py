@@ -1,0 +1,35 @@
+"""Optional ``jax.profiler`` trace capture for benchmark runs.
+
+``maybe_trace(None)`` is a free no-op, so callers can thread the
+``--profile DIR`` flag straight through.  Traces are viewable with
+TensorBoard / Perfetto (see README "Observability"); capture failures
+degrade to a warning because profiler availability varies by backend.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import sys
+
+
+@contextlib.contextmanager
+def maybe_trace(trace_dir: str | None):
+    """Capture a jax.profiler trace into ``trace_dir`` if given."""
+    if not trace_dir:
+        yield None
+        return
+    import jax
+    os.makedirs(trace_dir, exist_ok=True)
+    try:
+        jax.profiler.start_trace(trace_dir)
+    except Exception as exc:  # pragma: no cover - backend dependent
+        print(f"[obs] profiler trace unavailable: {exc}", file=sys.stderr)
+        yield None
+        return
+    try:
+        yield trace_dir
+    finally:
+        try:
+            jax.profiler.stop_trace()
+        except Exception as exc:  # pragma: no cover
+            print(f"[obs] profiler stop failed: {exc}", file=sys.stderr)

@@ -1,0 +1,177 @@
+"""Device-resident observability state, carried through the fused engine.
+
+``ObsState`` rides inside ``EngineState`` so every metric below is
+maintained INSIDE the jitted hot loop -- zero extra dispatches, zero
+host syncs; the host only ever reads it back at segment boundaries
+(``repro.obs.export``).  Three instruments:
+
+  * ``hist``      -- log2-bucketed histograms of the modeled per-op
+                     service cost (Table-1 constants, ``repro.obs.cost``),
+                     one row per op kind.  The per-step counter DELTAS --
+                     compaction stalls included, which is exactly where
+                     the read tail lives -- are turned into a per-op cost
+                     and scatter-added branchlessly.  Histograms (not
+                     reservoirs) because vmapped per-partition states
+                     merge by plain summation.
+  * ``timeline``  -- a fixed-size ring of per-step counter deltas
+                     (op kind, op count, every ``Counters`` field), the
+                     workload-statistics substrate the self-tuning
+                     ROADMAP item needs.
+  * ``ev_*``      -- a compaction event ring: engine step index, trigger
+                     kind (rate-limit / watermark / §5.3 policy), the
+                     selected range's MSC score, objects moved and
+                     superseded, and the compaction's modeled I/O.
+
+Every update is a masked scatter-add / scatter-set with computed
+indices: no ``lax.cond`` over state, so the PR 4 branchless-hot-loop
+invariant (``tests/test_hlo_budget.py``) is preserved -- obs arrays are
+small and fixed-size, never pool-shaped.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs.cost import CostModel, compaction_io_us, step_io_us
+
+if TYPE_CHECKING:
+    # repro.core.engine carries ObsState, so this module must not import
+    # repro.core at module level (annotations are strings under
+    # future-annotations; TIMELINE_FIELDS is resolved lazily below)
+    from repro.core.tiers import Counters
+
+# histogram rows: engine op kinds 0..3 (PUT/GET/DELETE/SCAN, matching
+# repro.core.engine) plus the serving engine's fused decode tick
+TICK = 4
+N_KINDS = 5
+KIND_NAMES = ("put", "get", "delete", "scan", "tick")
+
+# compaction event trigger kinds (the three gates of engine.maintenance)
+TRIG_RATE_LIMIT, TRIG_WATERMARK, TRIG_POLICY = 0, 1, 2
+TRIGGER_NAMES = ("rate_limit", "watermark", "policy")
+
+# timeline row layout: [kind, n_ops, *Counters deltas].  Resolved
+# lazily (module __getattr__) so importing repro.obs does not pull in
+# repro.core before repro.core.engine has finished importing US.
+def _timeline_fields() -> tuple:
+    from repro.core.tiers import Counters
+    return ("kind", "n_ops") + Counters._fields
+
+
+def __getattr__(name: str):
+    if name == "TIMELINE_FIELDS":
+        globals()[name] = _timeline_fields()
+        return globals()[name]
+    raise AttributeError(name)
+
+
+class ObsConfig(NamedTuple):
+    """Static observability knobs (closure constants under jit; hashable
+    so they key the engine's jit caches through ``EngineConfig``)."""
+    enabled: bool = True
+    n_buckets: int = 32        # log2 latency buckets: bucket b covers
+                               # (2^(b-1), 2^b] us, bucket 0 covers <= 1us
+    timeline_len: int = 256    # per-step counter-delta ring entries
+    event_len: int = 128       # compaction event ring entries
+    cost: CostModel = CostModel()
+    fast_write_amp: float = 1.0  # LSM baselines model NVM-internal
+                               # rewrites (harness.FAST_WRITE_AMP)
+
+
+class ObsState(NamedTuple):
+    """One donatable pytree of small fixed-size instruments."""
+    hist: jax.Array          # i32[N_KINDS, n_buckets] per-op-cost histogram
+    timeline: jax.Array      # i32[timeline_len, len(TIMELINE_FIELDS)]
+    t_pos: jax.Array         # i32: total steps recorded (ring wraps)
+    ev_step: jax.Array       # i32[event_len] engine step index
+    ev_trigger: jax.Array    # i32[event_len] TRIG_* kind
+    ev_score: jax.Array      # f32[event_len] selected MSC score
+    ev_moved: jax.Array      # i32[event_len] demoted + promoted + merged
+    ev_superseded: jax.Array # i32[event_len] stale copies merged away
+    ev_io_us: jax.Array      # f32[event_len] modeled compaction I/O
+    ev_count: jax.Array      # i32: total events recorded (ring wraps)
+
+
+def init(cfg: ObsConfig) -> ObsState:
+    e = cfg.event_len
+    return ObsState(
+        hist=jnp.zeros((N_KINDS, cfg.n_buckets), jnp.int32),
+        timeline=jnp.zeros((cfg.timeline_len, len(_timeline_fields())),
+                           jnp.int32),
+        t_pos=jnp.zeros((), jnp.int32),
+        ev_step=jnp.zeros((e,), jnp.int32),
+        ev_trigger=jnp.zeros((e,), jnp.int32),
+        ev_score=jnp.zeros((e,), jnp.float32),
+        ev_moved=jnp.zeros((e,), jnp.int32),
+        ev_superseded=jnp.zeros((e,), jnp.int32),
+        ev_io_us=jnp.zeros((e,), jnp.float32),
+        ev_count=jnp.zeros((), jnp.int32),
+    )
+
+
+def bucket_of_us(us: jax.Array, n_buckets: int) -> jax.Array:
+    """Log2 bucket index of a (scalar or vector) cost in microseconds:
+    bucket 0 holds us <= 1, bucket b holds (2^(b-1), 2^b].  Mirrored
+    bit-for-bit by ``repro.obs.export.bucket_of_us_np`` (the oracle).
+
+    ceil(log2(x)) is read off the f32 bit pattern (exponent field, plus
+    one unless the mantissa is zero, i.e. x is an exact power of two):
+    pure integer ops, so the host mirror and every backend agree on ALL
+    inputs -- libm log2 implementations differ by a ULP right above
+    bucket boundaries, which ceil() would amplify into a bucket flip."""
+    us = jnp.maximum(jnp.asarray(us, jnp.float32), jnp.float32(1e-6))
+    bits = jax.lax.bitcast_convert_type(us, jnp.int32)
+    b = (bits >> 23) - 127 + ((bits & 0x7FFFFF) != 0).astype(jnp.int32)
+    return jnp.clip(b, 0, n_buckets - 1)
+
+
+def counter_delta(after: Counters, before: Counters) -> Counters:
+    return jax.tree.map(lambda a, b: a - b, after, before)
+
+
+def record_step(obs: ObsState, cfg: ObsConfig, *, kind: jax.Array,
+                n_ops: jax.Array, delta: Counters) -> ObsState:
+    """Fold one engine step's counter deltas into the histograms and the
+    timeline ring.  ``kind`` is a traced scalar (the branchless engine
+    passes ``op.kind`` straight through); the modeled step cost INCLUDES
+    any compaction I/O the step's maintenance plane performed -- a batch
+    that stalled behind a compaction lands in a high bucket, which is
+    the tail the paper's headline claim is about.
+
+    Branchless: one scatter-add into ``hist[kind, bucket]`` weighted by
+    the batch's valid-op count, one scatter-set of the timeline row."""
+    n_ops = jnp.asarray(n_ops, jnp.int32)
+    us = step_io_us(delta, cfg.cost, cfg.fast_write_amp)
+    per_op = us / jnp.maximum(n_ops.astype(jnp.float32), 1.0)
+    b = bucket_of_us(per_op, cfg.n_buckets)
+    hist = obs.hist.at[kind, b].add(n_ops)
+    row = jnp.concatenate([
+        jnp.stack([jnp.asarray(kind, jnp.int32), n_ops]),
+        jnp.stack([jnp.asarray(v, jnp.int32) for v in delta])])
+    timeline = obs.timeline.at[obs.t_pos % cfg.timeline_len].set(row)
+    return obs._replace(hist=hist, timeline=timeline,
+                        t_pos=obs.t_pos + 1)
+
+
+def record_compaction(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
+                      trigger: jax.Array,
+                      stats: "CompactionStats") -> ObsState:  # noqa: F821
+    """Append one compaction to the event ring (runs INSIDE the
+    ``engine.maintenance`` while_loop body -- all scatter-sets, the ring
+    index is ``ev_count % event_len``)."""
+    i = obs.ev_count % cfg.event_len
+    moved = stats.n_demoted + stats.n_promoted + stats.n_merged
+    return obs._replace(
+        ev_step=obs.ev_step.at[i].set(jnp.asarray(step, jnp.int32)),
+        ev_trigger=obs.ev_trigger.at[i].set(
+            jnp.asarray(trigger, jnp.int32)),
+        ev_score=obs.ev_score.at[i].set(
+            jnp.asarray(stats.score, jnp.float32)),
+        ev_moved=obs.ev_moved.at[i].set(moved.astype(jnp.int32)),
+        ev_superseded=obs.ev_superseded.at[i].set(
+            stats.n_superseded.astype(jnp.int32)),
+        ev_io_us=obs.ev_io_us.at[i].set(
+            compaction_io_us(stats, cfg.cost, cfg.fast_write_amp)),
+        ev_count=obs.ev_count + 1)

@@ -25,6 +25,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import engine as engine_core
 from repro.core import paged_kv, policy
+from repro.obs import export as obs_export
+from repro.obs import state as obs_plane
 from repro.core.paged_kv import PagedKVConfig, PagedKVState
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
@@ -117,6 +119,7 @@ def _tick(est: engine_core.EngineState, params, tokens, valid,
     Movement replay run through the Pallas kernels when "pallas"."""
     mirror = paged_kv.movement_mirror(kv_cfg, backend=ecfg.backend,
                                       interpret=ecfg.interpret)
+    ctr0 = est.tier.ctr
     kv = est.payload._replace(tier=est.tier)
     fpk = paged_kv.tail_page_keys(kv, kv_cfg)
     need = jnp.sum(valid.astype(jnp.int32))
@@ -128,6 +131,13 @@ def _tick(est: engine_core.EngineState, params, tokens, valid,
     logits, kv = paged_decode_step(mcfg, kv_cfg, params, kv, tokens,
                                    seq_ids, kv.seq_len, valid)
     est = est._replace(tier=kv.tier, payload=kv._replace(tier=None))
+    if ecfg.obs.enabled:
+        # the decode tick is one op-kind row: its counter delta spans
+        # maintenance AND the paged gather/append of the decode itself
+        est = est._replace(obs=obs_plane.record_step(
+            est.obs, ecfg.obs, kind=jnp.int32(obs_plane.TICK),
+            n_ops=jnp.sum(valid.astype(jnp.int32)),
+            delta=obs_plane.counter_delta(est.tier.ctr, ctr0)))
     return est, logits
 
 
@@ -243,3 +253,8 @@ class ServeEngine:
     @property
     def counters(self) -> dict:
         return {k: int(v) for k, v in self.est.tier.ctr._asdict().items()}
+
+    def obs_snapshot(self) -> dict:
+        """Host-side snapshot of the device-resident observability plane
+        (tick-latency histogram, counter timeline, compaction events)."""
+        return obs_export.snapshot(self.est.obs)

@@ -1,0 +1,56 @@
+"""The tracked BENCH_RESULTS.json must stay regenerable: every row must
+come from a benchmark in the CURRENT registry, and _meta must record how
+the file was produced (the ``--check-rows`` guard, as a tier-1 test).
+
+This is the failure mode the repo shipped once: ``tail-inc-*`` /
+``tail-mono-*`` rows from a never-landed branch sat in the tracked JSON
+with nothing able to regenerate them.
+"""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import paper_benchmarks as P  # noqa: E402
+from benchmarks.run import check_rows  # noqa: E402
+
+TRACKED = ROOT / "BENCH_RESULTS.json"
+
+
+def test_expected_rows_covers_registry():
+    """expected_rows() enumerates every registered benchmark (asserted
+    inside), and no benchmark claims a row another one also claims."""
+    rows = P.expected_rows()
+    assert set(rows) == set(P.ALL)
+    flat = [n for names in rows.values() for n in names]
+    assert len(flat) == len(set(flat)), "row name claimed twice"
+    assert "tail" in rows and set(rows["tail"]) == {
+        "tail-ycsbC", "tail-flash-crowd", "tail-delete-churn"}
+
+
+def test_tracked_results_are_fresh():
+    """Every tracked row is producible by the current registry and _meta
+    has full provenance -- same predicate as ``benchmarks.run
+    --check-rows`` (also asserted directly so the CLI and the test can't
+    drift)."""
+    data = json.loads(TRACKED.read_text())
+    known = {n for names in P.expected_rows().values() for n in names}
+    stale = sorted(set(data) - known - {"_meta"})
+    assert not stale, f"stale rows no benchmark regenerates: {stale}"
+    meta = data.get("_meta", {})
+    for key in ("seed", "backend", "revision", "command"):
+        assert key in meta, f"_meta missing {key!r}"
+    assert check_rows(str(TRACKED)) == 0
+
+
+def test_tracked_tail_rows_present_and_conserved():
+    """The tail benchmark's rows ship in the tracked JSON with the obs
+    plane's conservation invariants intact."""
+    data = json.loads(TRACKED.read_text())
+    for nm in ("tail-ycsbC", "tail-flash-crowd", "tail-delete-churn"):
+        row = data[nm]
+        assert row["hist_mass"] == row["n_ops"] > 0, nm
+        assert row["comp_events"] == row["compactions"], nm
+        assert 0 < row["p50_us"] <= row["p99_us"] <= row["p999_us"], nm
