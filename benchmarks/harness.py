@@ -110,11 +110,14 @@ def make_cfg(key_space=1 << 15, fast_frac=0.125, **kw) -> TierConfig:
 
 
 def make_system(variant: str, cfg: TierConfig, seed: int = 0,
-                backend: str | None = None) -> PrismDB:
+                backend: str | None = None,
+                compaction_quantum: int = 0) -> PrismDB:
     """Paper baselines (§7): prism / prism-precise / lsm / ra / mutant.
 
     ``backend=None`` -> the suite-wide ``DEFAULT_BACKEND`` (the
-    ``--backend`` flag)."""
+    ``--backend`` flag).  ``compaction_quantum > 0`` turns on preemptible
+    micro-step compaction (the tail-amortized rows); 0 keeps the paper's
+    run-to-completion behavior."""
     backend = backend or DEFAULT_BACKEND
     # the obs plane models each variant's fast-tier write amplification
     # on device, so its histograms match io_time_s(fast_write_amp=...)
@@ -129,27 +132,30 @@ def make_system(variant: str, cfg: TierConfig, seed: int = 0,
     pol = policy.PolicyConfig(epoch_ops=1024, cooldown_ops=16384,
                               read_heavy_frac=0.8, slow_tracked_frac=0.3,
                               detect_ops=1024)
+    q = compaction_quantum
     if variant == "prism":
         return PrismDB(cfg, seed=seed, pol_cfg=pol, backend=backend,
-                       obs=obs)
+                       obs=obs, compaction_quantum=q)
     if variant == "prism-noprom":
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
-                       backend=backend, obs=obs)
+                       backend=backend, obs=obs, compaction_quantum=q)
     if variant == "prism-precise":
         return PrismDB(cfg, seed=seed, pol_cfg=pol, precise=True,
-                       backend=backend, obs=obs)
+                       backend=backend, obs=obs, compaction_quantum=q)
     if variant == "lsm":          # RocksDB het: no pinning, min-overlap,
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
                        selection="min_overlap", pin_mode="none",
-                       append_only=True, backend=backend, obs=obs)
+                       append_only=True, backend=backend, obs=obs,
+                       compaction_quantum=q)
     if variant == "ra":           # rocksdb-RA: pinning + naive selection
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
                        selection="min_overlap", pin_mode="object",
-                       append_only=True, backend=backend, obs=obs)
+                       append_only=True, backend=backend, obs=obs,
+                       compaction_quantum=q)
     if variant == "mutant":       # file-granularity placement on an LSM
         return PrismDB(cfg, seed=seed, pol_cfg=pol, promote=False,
                        pin_mode="file", append_only=True, backend=backend,
-                       obs=obs)
+                       obs=obs, compaction_quantum=q)
     raise ValueError(variant)
 
 
@@ -258,12 +264,16 @@ def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
         # are bit-identical across backends (the kernels claim pins it)
         snap = db.obs_snapshot()
         hd = obs_export.hist_delta(snap, base_obs)
-        extra.update(obs_export.quantiles_from_hist(hd))
+        hsd = obs_export.hist_sum_delta(snap, base_obs)
+        extra.update(obs_export.quantiles_from_hist(hd, sums=hsd))
         extra["p50_us"] = extra.pop("p50")
         extra["p99_us"] = extra.pop("p99")
         extra["p999_us"] = extra.pop("p999")
         extra["hist_mass"] = int(hd.sum())
-        extra["comp_events"] = snap["ev_count"] - base_obs["ev_count"]
+        # compaction JOBS, not ring entries: the quantized path logs
+        # start/resume/commit entries per job, but ev_jobs counts one
+        # per trigger in both modes (== ctr.compactions)
+        extra["comp_events"] = snap["ev_jobs"] - base_obs["ev_jobs"]
     return RunResult(name=name, n_ops=n_ops, wall_s=wall,
                      compact_cpu_s=0.0, io_s=io, counters=ctr, extra=extra)
 

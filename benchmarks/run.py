@@ -315,6 +315,30 @@ def _validate(rows):
               f"p50={v.get('p50_us', 0):.1f} p99={v.get('p99_us', 0):.1f} "
               f"p999={v.get('p999_us', 0):.1f}")
 
+    for wk in ("flash-crowd", "delete-churn"):
+        base = f"tail-amortized-{wk}"
+        inf_, q64 = d.get(f"{base}-qinf"), d.get(f"{base}-q64")
+        if not (inf_ and q64):
+            continue
+        claim(f"tail-amortized: {wk} p99/p999 strictly improve at "
+              "quantum=64 vs run-to-completion",
+              q64["p99_us"] < inf_["p99_us"]
+              and q64["p999_us"] < inf_["p999_us"],
+              f"p99 {inf_['p99_us']:.1f} -> {q64['p99_us']:.1f}us, "
+              f"p999 {inf_['p999_us']:.1f} -> {q64['p999_us']:.1f}us")
+        # the schedule only re-attributes cost across steps: total
+        # modeled I/O, compaction count and physical write volume are
+        # the SAME migrations, so they must match bit-for-bit
+        eq_keys = ("io_s", "compactions", "slow_write_objs",
+                   "slow_read_objs", "hist_mass")
+        rows_q = [d[f"{base}-{qnm}"] for qnm, _ in
+                  (("qinf", 0), ("q256", 0), ("q64", 0))
+                  if f"{base}-{qnm}" in d]
+        claim(f"tail-amortized: {wk} total modeled I/O and end-state "
+              "counters identical across the quantum sweep",
+              all(r[k] == rows_q[0][k] for r in rows_q for k in eq_keys),
+              "; ".join(f"{k}={rows_q[0][k]:.3f}" for k in eq_keys))
+
     sc = {k: v for k, v in d.items() if k.startswith("scenario-")}
     if sc:
         worst = max(v["dispatches_per_kop"] for v in sc.values())

@@ -21,6 +21,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import bloom, mapper, msc, tracker
 from repro.core.tiers import (Counters, TierConfig, TierState, bucket_of,
@@ -43,6 +44,9 @@ class Movement(NamedTuple):
     p_src_slot: jax.Array   # i32[cap_s] promotion source (slow tier)
     p_dst_slot: jax.Array   # i32[cap_s] promotion destination (fast tier)
     p_valid: jax.Array      # bool
+    m_key: jax.Array = ()   # i32[cap_f+cap_s] merged keys, sorted (PADKEY
+                            # pad) -- the in-flight carry's lookup key for
+                            # dual reads against a half-migrated range
 
 
 class CompactionStats(NamedTuple):
@@ -324,7 +328,8 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
         m_valid=wrote,
         p_src_slot=jnp.where(pro_ok, sslots, -1).astype(jnp.int32),
         p_dst_slot=jnp.where(pro_ok, pro_slots, -1).astype(jnp.int32),
-        p_valid=pro_ok)
+        p_valid=pro_ok,
+        m_key=mkeys.astype(jnp.int32))
     return new_state, stats, mv
 
 
@@ -334,3 +339,234 @@ def needs_compaction(state: TierState, cfg: TierConfig) -> jax.Array:
 
 def below_low_watermark(state: TierState, cfg: TierConfig) -> jax.Array:
     return fast_occupancy(state) < cfg.low_watermark
+
+
+# ------------------------------------------- preemptible micro-step drain
+#
+# With ``EngineConfig.compaction_quantum > 0`` a triggered compaction is
+# split into bounded micro-steps: the trigger step commits the LOGICAL
+# transition exactly as run-to-completion does (pools, indexes, run
+# directory, counters -- so every downstream decision, the rate
+# limiter's headroom, the watermark, the §5.3 policy and the final state
+# stay bit-identical for ANY quantum), but the PHYSICAL migration -- the
+# staged Movement rows and the modeled I/O attribution -- is carried in
+# device state (``InFlight``, a field of ``EngineState``) and drained at
+# most ``compaction_quantum`` merged rows per engine step.  Each drain
+# replays its slice of the staged rows through the tier_compact data
+# movers (both backends), guarded so every replayed write is provably
+# idempotent: a source row is copied only while the destination still
+# holds the same bits, so a put/delete/later-compaction racing the
+# in-flight job can never corrupt it.  Reads inside the selected range
+# are served by a dual lookup (``inflight_read``) against the
+# not-yet-drained source slots until the job commits.
+
+
+class InFlight(NamedTuple):
+    """In-flight compaction carry: the un-drained remainder of triggered
+    compaction jobs, plus the latest job's staged Movement rows.
+
+    All arrays are cap-shaped (``cap_fast + cap_slow`` -- per-compaction
+    working-set bounds), never pool-shaped: the hot loop stays pool-size
+    independent.  ``rem_rows > 0`` <=> a job is in flight.  The ``rem_*``
+    category counters may span several overlapping jobs (a later trigger
+    stages on top of an un-drained backlog); the staged row arrays always
+    describe the LATEST job -- older rows are already bit-resident at
+    their destinations (the logical commit wrote them), so dropping their
+    replay slice loses no data, only its micro-step attribution."""
+    rem_rows: jax.Array         # i32: un-drained merged rows (all jobs)
+    rem_run_read: jax.Array     # i32: un-attributed seq run reads
+    rem_run_written: jax.Array  # i32: un-attributed seq run writes
+    rem_fast_read: jax.Array    # i32: un-attributed demotion reads
+    rem_fast_write: jax.Array   # i32: un-attributed promotion writes
+    lo: jax.Array               # i32: union of in-flight key ranges
+    hi: jax.Array
+    score: jax.Array            # f32: latest job's MSC score
+    trigger: jax.Array          # i32: latest job's TRIG_* kind
+    m_key: jax.Array            # i32[capm] latest job's merged keys, sorted
+    m_src_tier: jax.Array       # i32[capm] 0=fast 1=slow
+    m_src_slot: jax.Array       # i32[capm]
+    m_dst_slot: jax.Array       # i32[capm] destination slow slot (-1 none)
+    m_done: jax.Array           # i32: drained merge-row cursor (latest job)
+    m_total: jax.Array          # i32: latest job's merged-row count
+
+
+def inflight_cap(cfg: TierConfig) -> int:
+    """Static staged-row capacity: one compaction's merge working set."""
+    return 2 * cfg.run_size + 2 * cfg.run_size * max(cfg.range_fanout_i, 1)
+
+
+def init_inflight(cfg: TierConfig) -> InFlight:
+    capm = inflight_cap(cfg)
+    z = jnp.zeros((), jnp.int32)
+    return InFlight(
+        rem_rows=z, rem_run_read=z, rem_run_written=z, rem_fast_read=z,
+        rem_fast_write=z, lo=z, hi=z, score=jnp.zeros((), jnp.float32),
+        trigger=z,
+        m_key=jnp.full((capm,), PADKEY, jnp.int32),
+        m_src_tier=jnp.zeros((capm,), jnp.int32),
+        m_src_slot=jnp.zeros((capm,), jnp.int32),
+        m_dst_slot=jnp.full((capm,), -1, jnp.int32),
+        m_done=z, m_total=z)
+
+
+def stage_inflight(fl: InFlight, stats: CompactionStats, mv: Movement,
+                   trigger: jax.Array) -> InFlight:
+    """Fold one just-committed compaction into the carry (runs inside the
+    ``engine.maintenance`` while_loop body, right after ``compact_once``).
+
+    ``rem_rows`` grows by at least 1 even for an empty merge so a job
+    with only read/demote work still gets drained (and its commit event
+    recorded) on a later step."""
+    active = fl.rem_rows > 0
+    return fl._replace(
+        rem_rows=fl.rem_rows + jnp.maximum(stats.n_merged, 1),
+        rem_run_read=fl.rem_run_read + stats.n_run_read,
+        rem_run_written=fl.rem_run_written + stats.n_run_written,
+        rem_fast_read=fl.rem_fast_read + stats.n_demoted,
+        rem_fast_write=fl.rem_fast_write + stats.n_promoted,
+        lo=jnp.where(active, jnp.minimum(fl.lo, stats.selected_lo),
+                     stats.selected_lo),
+        hi=jnp.where(active, jnp.maximum(fl.hi, stats.selected_hi),
+                     stats.selected_hi),
+        score=stats.score,
+        trigger=jnp.asarray(trigger, jnp.int32),
+        m_key=mv.m_key, m_src_tier=mv.m_src_tier,
+        m_src_slot=mv.m_src_slot, m_dst_slot=mv.m_dst_slot,
+        m_done=jnp.zeros((), jnp.int32), m_total=stats.n_merged)
+
+
+def _movers(backend: str, interpret: bool | None):
+    """Backend-dispatched (select-gather, scatter) row movers (lazy import:
+    repro.kernels imports this module's Movement)."""
+    if backend == "reference":
+        from repro.kernels.tier_compact.ref import (scatter_rows_ref,
+                                                    select_gather_rows_ref)
+        return select_gather_rows_ref, scatter_rows_ref
+    import functools
+
+    from repro.core import backend as backend_mod
+    from repro.kernels.tier_compact.tier_compact import (scatter_rows,
+                                                         select_gather_rows)
+    itp = backend_mod.resolve_interpret(interpret)
+    return (functools.partial(select_gather_rows, interpret=itp),
+            functools.partial(scatter_rows, interpret=itp))
+
+
+def drain_quantum(state: TierState, fl: InFlight, quantum: int, *,
+                  backend: str = "reference",
+                  interpret: bool | None = None
+                  ) -> tuple[TierState, InFlight, tuple, jax.Array]:
+    """Drain at most ``quantum`` merged rows of the in-flight migration.
+
+    Two halves, both O(quantum) per step (never pool-shaped work):
+
+    * attribution -- take ``k = min(quantum, rem_rows)`` rows off the
+      backlog and a proportional share of each modeled-I/O category
+      (the final drain takes every remainder exactly, so a job's quanta
+      sum to its run-to-completion charge);
+    * physical replay -- gather the quantum's slice of the latest job's
+      staged source rows through the backend's tier_compact movers and
+      scatter them to their destination slow slots.  A row is replayed
+      only while destination key and bits still match its source
+      (idempotence guard): interleaved client writes or a later
+      compaction may have recycled either slot, in which case the row is
+      already bit-final and the copy is skipped.
+
+    Returns ``(state', fl', (run_read, run_written, fast_read,
+    fast_write), k)`` -- the drained category counts price the step's
+    quantum (``repro.obs.cost.drain_io_us``).
+    """
+    k = jnp.minimum(jnp.int32(quantum), fl.rem_rows)
+    rem_after = fl.rem_rows - k
+    finish = (fl.rem_rows > 0) & (rem_after == 0)
+    denom = jnp.maximum(fl.rem_rows.astype(jnp.float32), 1.0)
+
+    def take(rem: jax.Array) -> jax.Array:
+        prop = jnp.floor(rem.astype(jnp.float32)
+                         * k.astype(jnp.float32) / denom).astype(jnp.int32)
+        return jnp.where(finish, rem, jnp.minimum(prop, rem))
+
+    d_rr, d_rw = take(fl.rem_run_read), take(fl.rem_run_written)
+    d_fr, d_fw = take(fl.rem_fast_read), take(fl.rem_fast_write)
+
+    # ---- physical replay of the staged window [m_done, m_done + k) ------
+    capm = fl.m_key.shape[0]
+    q = min(max(int(quantum), 1), capm)
+    start = jnp.clip(fl.m_done, 0, capm - q)
+    sl = lambda a: lax.dynamic_slice(a, (start,), (q,))
+    keys, tier_src = sl(fl.m_key), sl(fl.m_src_tier)
+    src, dst = sl(fl.m_src_slot), sl(fl.m_dst_slot)
+    pos = start + jnp.arange(q, dtype=jnp.int32)
+    in_q = (pos >= fl.m_done) & (pos < fl.m_done + k) & (pos < fl.m_total)
+    nf, ns = state.fast_keys.shape[0], state.slow_keys.shape[0]
+    src_slow = tier_src != 0
+    idx = jnp.where(src_slow, jnp.clip(src, 0, ns - 1),
+                    jnp.clip(src, 0, nf - 1))
+    sel, sc = _movers(backend, interpret)
+    rows = sel(state.fast_vals, state.slow_vals, src_slow, idx)
+    dst_c = jnp.clip(dst, 0, ns - 1)
+    live = (in_q & (keys != PADKEY) & (dst >= 0)
+            & (state.slow_keys[dst_c] == keys)
+            & jnp.all(rows == state.slow_vals[dst_c], axis=1))
+    slow_vals = sc(state.slow_vals, jnp.where(live, dst, ns), rows, live)
+
+    fl = fl._replace(
+        rem_rows=rem_after,
+        rem_run_read=fl.rem_run_read - d_rr,
+        rem_run_written=fl.rem_run_written - d_rw,
+        rem_fast_read=fl.rem_fast_read - d_fr,
+        rem_fast_write=fl.rem_fast_write - d_fw,
+        m_done=jnp.minimum(fl.m_done + k, fl.m_total))
+    return (state._replace(slow_vals=slow_vals), fl,
+            (d_rr, d_rw, d_fr, d_fw), k)
+
+
+def inflight_read(state: TierState, fl: InFlight, keys: jax.Array,
+                  vals: jax.Array, found: jax.Array, src: jax.Array
+                  ) -> jax.Array:
+    """Dual lookup against a half-migrated range: a get whose key sits in
+    the in-flight range and whose staged merge row has NOT been drained
+    yet is served from the un-migrated SOURCE slot (the old run / the
+    demoted fast slot) instead of the destination -- the paper's reads
+    racing an in-progress compaction.  Consistency guard as in
+    ``drain_quantum``: the source is used only while its bits still match
+    the committed destination, so the returned value is bit-identical to
+    the logical lookup for any quantum (pinned by the equivalence
+    property test)."""
+    active = fl.rem_rows > 0
+    in_range = (keys >= fl.lo) & (keys < fl.hi)
+    pos = jnp.clip(jnp.searchsorted(fl.m_key, keys), 0,
+                   fl.m_key.shape[0] - 1)
+    staged = (fl.m_key[pos] == keys) & (pos >= fl.m_done) \
+        & (pos < fl.m_total)
+    nf, ns = state.fast_keys.shape[0], state.slow_keys.shape[0]
+    s_tier, s_slot, s_dst = (fl.m_src_tier[pos], fl.m_src_slot[pos],
+                             fl.m_dst_slot[pos])
+    src_slow = s_tier != 0
+    sval = jnp.where(src_slow[:, None],
+                     state.slow_vals[jnp.clip(s_slot, 0, ns - 1)],
+                     state.fast_vals[jnp.clip(s_slot, 0, nf - 1)])
+    dst_c = jnp.clip(s_dst, 0, ns - 1)
+    coherent = (s_dst >= 0) & (state.slow_keys[dst_c] == keys) \
+        & jnp.all(sval == state.slow_vals[dst_c], axis=1)
+    use = active & in_range & staged & coherent & found & (src == 1)
+    return jnp.where(use[:, None], sval, vals)
+
+
+def defer_adjust(delta: Counters, before: InFlight,
+                 after: InFlight) -> Counters:
+    """Re-attribute one step's counter delta for the obs plane: subtract
+    the net I/O DEFERRED into the carry this step (staged minus drained,
+    per category).  The trigger step is charged only its first quantum;
+    later steps are charged the quanta they drain -- counters themselves
+    stay committed at trigger time (total modeled I/O is unchanged)."""
+    n_rr = after.rem_run_read - before.rem_run_read
+    n_rw = after.rem_run_written - before.rem_run_written
+    n_fr = after.rem_fast_read - before.rem_fast_read
+    n_fw = after.rem_fast_write - before.rem_fast_write
+    return delta._replace(
+        slow_reads=delta.slow_reads - n_rr,
+        comp_reads=delta.comp_reads - n_rr,
+        slow_writes=delta.slow_writes - n_rw,
+        fast_reads=delta.fast_reads - n_fr,
+        fast_writes=delta.fast_writes - n_fw)

@@ -43,7 +43,8 @@ class PrismDB:
                  append_only: bool = False, consolidate_every: int = 0,
                  backend: str = "reference",
                  interpret: bool | None = None,
-                 obs: ObsConfig | None = None):
+                 obs: ObsConfig | None = None,
+                 compaction_quantum: int = 0):
         """``append_only`` models LSM semantics for the baselines: every
         update appends a new version (memtable/L0), so fast-tier space is
         consumed by total write VOLUME, not unique keys -- compactions must
@@ -66,7 +67,8 @@ class PrismDB:
             precise=precise, selection=selection, pin_mode=pin_mode,
             append_only=append_only, consolidate_every=consolidate_every,
             backend=backend, interpret=interpret,
-            obs=obs if obs is not None else ObsConfig())
+            obs=obs if obs is not None else ObsConfig(),
+            compaction_quantum=compaction_quantum)
         self.estate = engine.init(self.ecfg, jax.random.PRNGKey(seed))
         self._step = engine.jit_step(self.ecfg)
         self._run = engine.jit_run_ops(self.ecfg)
@@ -228,13 +230,15 @@ class PartitionedDB:
                  pol_cfg: policy.PolicyConfig | None = None,
                  backend: str = "reference",
                  interpret: bool | None = None,
-                 obs: ObsConfig | None = None):
+                 obs: ObsConfig | None = None,
+                 compaction_quantum: int = 0):
         self.cfg = cfg
         self.p = n_partitions
         self.ecfg = EngineConfig(
             tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
             backend=backend, interpret=interpret,
-            obs=obs if obs is not None else ObsConfig())
+            obs=obs if obs is not None else ObsConfig(),
+            compaction_quantum=compaction_quantum)
         rngs = jax.random.split(jax.random.PRNGKey(seed), n_partitions)
         self.estate = jax.vmap(
             functools.partial(engine.init, self.ecfg))(rngs)

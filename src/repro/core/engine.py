@@ -95,6 +95,18 @@ class EngineConfig(NamedTuple):
                                 # static (hashable) so enabled/sizes key
                                 # the jit caches.  The ObsState rides in
                                 # EngineState: zero extra dispatches
+    compaction_quantum: int = 0  # >0: preemptible micro-step compaction.
+                                # A triggered job still COMMITS its
+                                # logical transition at the trigger (so
+                                # pools/indexes/counters/final state are
+                                # bit-identical for any quantum), but its
+                                # physical migration + modeled-I/O
+                                # attribution ride the in-flight carry
+                                # (EngineState.comp) and drain at most
+                                # this many merged rows per engine step.
+                                # 0 = run-to-completion (today's exact
+                                # code path: the carry machinery is not
+                                # even traced)
 
 
 class EngineState(NamedTuple):
@@ -106,6 +118,8 @@ class EngineState(NamedTuple):
     steps: jax.Array            # i32: engine steps (consolidation clock)
     payload: Any = ()           # pytree mirrored through compactions
     obs: Any = ()               # ObsState when cfg.obs.enabled, else ()
+    comp: Any = ()              # compaction.InFlight when
+                                # cfg.compaction_quantum > 0, else ()
 
 
 class OpBatch(NamedTuple):
@@ -142,7 +156,9 @@ def init(cfg: EngineConfig, rng: jax.Array, payload: Any = (),
         pol=policy.init(), rng=rng,
         virtual_extra=jnp.zeros((), jnp.int32),
         steps=jnp.zeros((), jnp.int32), payload=payload,
-        obs=obs_plane.init(cfg.obs) if cfg.obs.enabled else ()))
+        obs=obs_plane.init(cfg.obs) if cfg.obs.enabled else (),
+        comp=(compaction.init_inflight(cfg.tier)
+              if cfg.compaction_quantum > 0 else ())))
 
 
 def make_op(kind: int, keys: jax.Array, vals: jax.Array | None = None,
@@ -169,34 +185,53 @@ def _compact1(state: EngineState, cfg: EngineConfig,
               force_pin_keys: jax.Array | None,
               trigger: jax.Array | None = None) -> EngineState:
     """One compaction + payload mirroring + append-only fill accounting
-    (+ one observability event when the obs plane is enabled)."""
+    (+ one observability event when the obs plane is enabled).
+
+    With ``cfg.compaction_quantum > 0`` the logical transition still
+    commits HERE (bit-identical state for any quantum), but the job's
+    Movement rows and I/O categories are staged into the in-flight carry
+    for ``engine_step`` to drain, and the event logged is an EV_START
+    with zero ``io_us`` -- the cost lands on the draining steps."""
+    quantized = cfg.compaction_quantum > 0
+    want_mv = quantized or mirror is not None
     rng, sub = jax.random.split(state.rng)
     out = compaction.compact_once(
         state.tier, cfg.tier, rng=sub, promote=cfg.promote,
         precise=cfg.precise, selection=cfg.selection, pin_mode=cfg.pin_mode,
-        with_movement=mirror is not None, force_pin_keys=force_pin_keys,
+        with_movement=want_mv, force_pin_keys=force_pin_keys,
         backend=cfg.backend, interpret=cfg.interpret)
-    if mirror is None:
+    if not want_mv:
         tier, stats = out
         payload = state.payload
     else:
         tier, stats, mv = out
-        payload = mirror(state.payload, mv)
+        # payload mirrors replay at commit, NOT per quantum: deferring
+        # them is unsound (a later step may clobber the source pages) --
+        # the paper's §6 partition lock covers exactly this window
+        payload = (state.payload if mirror is None
+                   else mirror(state.payload, mv))
     ve = state.virtual_extra
     if cfg.append_only:
         # phantom versions merge away only when the compaction actually
         # merged duplicates: decay by the measured superseded-copy count,
         # not by key-range coverage (which decayed even on no-op merges).
         ve = jnp.maximum(ve - stats.n_superseded, 0)
+    trig = (jnp.int32(obs_plane.TRIG_POLICY) if trigger is None
+            else trigger)
+    comp = state.comp
+    if quantized:
+        comp = compaction.stage_inflight(comp, stats, mv, trig)
     obs = state.obs
     if cfg.obs.enabled:
-        obs = obs_plane.record_compaction(
-            obs, cfg.obs, step=state.steps,
-            trigger=(jnp.int32(obs_plane.TRIG_POLICY)
-                     if trigger is None else trigger),
-            stats=stats)
+        if quantized:
+            obs = obs_plane.record_compaction(
+                obs, cfg.obs, step=state.steps, trigger=trig, stats=stats,
+                kind=obs_plane.EV_START, io_us=jnp.float32(0.0))
+        else:
+            obs = obs_plane.record_compaction(
+                obs, cfg.obs, step=state.steps, trigger=trig, stats=stats)
     return state._replace(tier=tier, rng=rng, virtual_extra=ve,
-                          payload=payload, obs=obs)
+                          payload=payload, obs=obs, comp=comp)
 
 
 def maintenance(state: EngineState, cfg: EngineConfig, *,
@@ -290,6 +325,48 @@ def read_policy(state: EngineState, cfg: EngineConfig, *,
 
 # ------------------------------------------------------------ engine step
 
+def drain_tick(state: EngineState, cfg: EngineConfig) -> EngineState:
+    """Drain one compaction quantum from the in-flight carry and log the
+    resume/commit event.  No-op (not even traced) when the quantum knob
+    is off; called once per engine step (right behind the maintenance
+    loop) / serve tick, so the client batch that trips a watermark pays
+    one quantum -- not the whole migration."""
+    if cfg.compaction_quantum <= 0:
+        return state
+    fl0 = state.comp
+
+    # count-gated while_loop (at most one iteration), like the watermark
+    # compaction loop and _consolidation_tick: on a step with no backlog
+    # the body never runs, and scoping the staged-row scatter inside a
+    # data-dependent while keeps the hot loop free of pool-shaped copies
+    # (a straight-line scatter here costs XLA two slow-pool copies/step).
+    zero = jnp.zeros((), jnp.int32)
+    def _cond(c):
+        ran, _, fl, _, _ = c
+        return ~ran & (fl.rem_rows > 0)
+
+    def _body(c):
+        _, tier, fl, _, _ = c
+        tier, fl, drained, k = compaction.drain_quantum(
+            tier, fl, cfg.compaction_quantum,
+            backend=cfg.backend, interpret=cfg.interpret)
+        return jnp.ones((), bool), tier, fl, drained, k
+
+    _, tier, fl, drained, k = lax.while_loop(
+        _cond, _body, (jnp.zeros((), bool), state.tier, fl0,
+                       (zero, zero, zero, zero), zero))
+    state = state._replace(tier=tier, comp=fl)
+    if cfg.obs.enabled:
+        from repro.obs.cost import drain_io_us
+        state = state._replace(obs=obs_plane.record_drain(
+            state.obs, cfg.obs, step=state.steps, trigger=fl0.trigger,
+            score=fl0.score, moved=k,
+            io_us=drain_io_us(*drained, cfg.obs.cost,
+                              cfg.obs.fast_write_amp),
+            done=(fl0.rem_rows > 0) & (fl.rem_rows == 0)))
+    return state
+
+
 def _consolidation_tick(state: EngineState, cfg: EngineConfig
                         ) -> EngineState:
     """Periodic full index rebuild, as a count-gated while_loop (runs the
@@ -331,6 +408,7 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
     is_del = op.kind == DELETE
     is_scan = op.kind == SCAN
     ctr0 = state.tier.ctr  # counter baseline for the obs step record
+    comp0 = state.comp     # carry baseline for the obs cost deferral
 
     # ONE pre-op maintenance loop: §4.2 rate limit for this batch's
     # writes, watermark hysteresis (armed at every step boundary: the
@@ -339,6 +417,11 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
     state = maintenance(state, cfg, need=need, wm_gate=True,
                         policy_enable=is_get | is_scan, mirror=mirror,
                         force_pin_keys=force_pin_keys)
+    # drain one quantum of any in-flight migration right behind the
+    # maintenance loop: a trigger step pays one quantum, not the whole
+    # job, and keeping the two slow-pool writers adjacent lets XLA chain
+    # their in-place updates (no pool-shaped copy per step)
+    state = drain_tick(state, cfg)
     before = tiers.free_fast_slots(state.tier)
 
     # one masked pass for the point lanes, sharing the index lookups
@@ -346,6 +429,15 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
         state.tier, cfg.tier, op.keys, op.vals, op.valid,
         is_put=is_put, is_get=is_get, is_del=is_del,
         backend=cfg.backend, interpret=cfg.interpret)
+    if cfg.compaction_quantum > 0:
+        # dual lookup: gets inside the in-flight range whose rows are
+        # not yet drained are served from the un-migrated source slots.
+        # Reads the post-op pools (a GET batch leaves them untouched;
+        # op.kind is per-batch) so the pool access chain stays serial.
+        # Drain writes are idempotent bit-equal replays, so draining
+        # before vs after this lookup cannot change any get result.
+        gvals = compaction.inflight_read(tier, state.comp, op.keys,
+                                         gvals, gfound, gsrc)
     # scan lane: zero-length windows unless this batch is a scan
     lens = jnp.where(is_scan, jnp.minimum(op.aux, cfg.scan_chunk), 0)
     tier, n_live = tiers.scan_batch(tier, cfg.tier, op.keys, lens,
@@ -368,10 +460,15 @@ def engine_step(state: EngineState, op: OpBatch, cfg: EngineConfig, *,
     if cfg.obs.enabled:
         # the delta spans the whole step -- maintenance included, so a
         # batch that stalled behind compactions lands in a tail bucket
+        delta = obs_plane.counter_delta(state.tier.ctr, ctr0)
+        if cfg.compaction_quantum > 0:
+            # re-attribute: the cost a trigger step deferred into the
+            # carry comes off ITS delta; the quanta this step drained
+            # (possibly from earlier triggers) come back on
+            delta = compaction.defer_adjust(delta, comp0, state.comp)
         state = state._replace(obs=obs_plane.record_step(
             state.obs, cfg.obs, kind=op.kind,
-            n_ops=jnp.sum(op.valid.astype(jnp.int32)),
-            delta=obs_plane.counter_delta(state.tier.ctr, ctr0)))
+            n_ops=jnp.sum(op.valid.astype(jnp.int32)), delta=delta))
 
     b, v = op.vals.shape
     res = OpResult(

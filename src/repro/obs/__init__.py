@@ -1,15 +1,18 @@
 """Device-resident observability plane (see ``repro.obs.state``)."""
-from repro.obs.cost import COST, CostModel, compaction_io_us, step_io_us
+from repro.obs.cost import (COST, CostModel, compaction_io_us, drain_io_us,
+                            step_io_us)
 from repro.obs.export import (bucket_bounds, bucket_of_us_np, events_table,
+                              hist_delta, hist_sum_delta,
                               quantile_from_hist, quantiles_from_hist,
                               snapshot, timeline_table, to_records,
                               write_jsonl)
 from repro.obs.profile import maybe_trace
-from repro.obs.state import (KIND_NAMES, N_KINDS, TICK,
+from repro.obs.state import (EV_COMMIT, EV_RESUME, EV_START,
+                             EVENT_KIND_NAMES, KIND_NAMES, N_KINDS, TICK,
                              TRIG_POLICY, TRIG_RATE_LIMIT, TRIG_WATERMARK,
                              TRIGGER_NAMES, ObsConfig, ObsState,
                              bucket_of_us, counter_delta, init,
-                             record_compaction, record_step)
+                             record_compaction, record_drain, record_step)
 
 
 def __getattr__(name: str):
@@ -22,12 +25,14 @@ def __getattr__(name: str):
     raise AttributeError(name)
 
 __all__ = [
-    "COST", "CostModel", "compaction_io_us", "step_io_us",
-    "bucket_bounds", "bucket_of_us_np", "events_table",
-    "quantile_from_hist", "quantiles_from_hist", "snapshot",
-    "timeline_table", "to_records", "write_jsonl", "maybe_trace",
-    "KIND_NAMES", "N_KINDS", "TICK", "TIMELINE_FIELDS", "TRIG_POLICY",
-    "TRIG_RATE_LIMIT", "TRIG_WATERMARK", "TRIGGER_NAMES", "ObsConfig",
-    "ObsState", "bucket_of_us", "counter_delta", "init",
-    "record_compaction", "record_step",
+    "COST", "CostModel", "compaction_io_us", "drain_io_us", "step_io_us",
+    "bucket_bounds", "bucket_of_us_np", "events_table", "hist_delta",
+    "hist_sum_delta", "quantile_from_hist", "quantiles_from_hist",
+    "snapshot", "timeline_table", "to_records", "write_jsonl",
+    "maybe_trace", "EV_COMMIT", "EV_RESUME", "EV_START",
+    "EVENT_KIND_NAMES", "KIND_NAMES", "N_KINDS", "TICK",
+    "TIMELINE_FIELDS", "TRIG_POLICY", "TRIG_RATE_LIMIT", "TRIG_WATERMARK",
+    "TRIGGER_NAMES", "ObsConfig", "ObsState", "bucket_of_us",
+    "counter_delta", "init", "record_compaction", "record_drain",
+    "record_step",
 ]

@@ -64,3 +64,19 @@ def compaction_io_us(stats: "CompactionStats", cost: CostModel,  # noqa: F821
             + stats.n_demoted.astype(jnp.float32) * cost.fast_read_us
             + stats.n_promoted.astype(jnp.float32)
             * (cost.fast_write_us * fast_write_amp))
+
+
+def drain_io_us(run_read: jax.Array, run_written: jax.Array,
+                fast_read: jax.Array, fast_write: jax.Array,
+                cost: CostModel, fast_write_amp: float = 1.0) -> jax.Array:
+    """Modeled I/O microseconds of one compaction QUANTUM: the slice of an
+    in-flight compaction's physical migration drained this engine step
+    (``repro.core.compaction.drain_quantum``).  Categories mirror
+    ``compaction_io_us`` exactly, so the per-quantum charges of a job sum
+    to the run-to-completion charge once the job commits."""
+    return (run_read.astype(jnp.float32) * cost.slow_seq_read_us_per_obj
+            + run_written.astype(jnp.float32)
+            * cost.slow_seq_write_us_per_obj
+            + fast_read.astype(jnp.float32) * cost.fast_read_us
+            + fast_write.astype(jnp.float32)
+            * (cost.fast_write_us * fast_write_amp))

@@ -14,8 +14,8 @@ from typing import Iterable, Mapping, Sequence
 import jax
 import numpy as np
 
-from repro.obs.state import (KIND_NAMES, N_KINDS, TRIGGER_NAMES,
-                             ObsState)
+from repro.obs.state import (EVENT_KIND_NAMES, KIND_NAMES, N_KINDS,
+                             TRIGGER_NAMES, ObsState)
 
 QUANTILES = (0.5, 0.99, 0.999)
 QUANTILE_NAMES = {0.5: "p50", 0.99: "p99", 0.999: "p999"}
@@ -40,12 +40,24 @@ def bucket_bounds(n_buckets: int):
     return lo, hi
 
 
-def quantile_from_hist(hist: np.ndarray, q: float) -> float:
+def quantile_from_hist(hist: np.ndarray, q: float,
+                       sums: np.ndarray | None = None) -> float:
     """Estimate the q-quantile of the per-op costs summarised by one
     histogram row: rank = ceil(q * N) (1-based, so p999 of 1000 ops is
     the worst op), find its bucket by cumulative count, interpolate
-    linearly inside the bucket's (lo, hi] bounds.  Returns 0.0 for an
-    empty histogram."""
+    linearly inside the bucket.  Returns 0.0 for an empty histogram.
+
+    Without ``sums`` the interpolation assumes a uniform spread over the
+    bucket's full (lo, hi] bounds -- which ALIASES nearby distributions:
+    log2 buckets are wide, so two workloads whose p50 ops land in the
+    same bucket at the same rank-fraction report the identical
+    percentile.  ``sums`` (the ``hist_sum`` running per-bucket cost
+    totals) de-aliases: the bucket's observed mean ``m = sum / count``
+    recentres the uniform model onto the widest sub-interval of
+    [lo, hi] whose midpoint is ``m`` -- [lo, 2m - lo] when the mass
+    leans low, [2m - hi, hi] when it leans high -- so the estimate
+    moves with the distribution while never leaving its bucket (the
+    order-statistic oracle bound still holds)."""
     hist = np.asarray(hist, np.int64)
     n = int(hist.sum())
     if n == 0:
@@ -57,18 +69,29 @@ def quantile_from_hist(hist: np.ndarray, q: float) -> float:
     lo, hi = bucket_bounds(hist.shape[0])
     before = int(cum[b - 1]) if b > 0 else 0
     frac = (rank - before) / float(hist[b])
-    return float(lo[b] + (hi[b] - lo[b]) * frac)
+    a, z = float(lo[b]), float(hi[b])
+    if sums is not None and hist[b] > 0:
+        m = float(np.asarray(sums, np.float64)[b]) / float(hist[b])
+        m = min(max(m, a), z)
+        a, z = max(a, 2.0 * m - z), min(z, 2.0 * m - a)
+    return float(a + (z - a) * frac)
 
 
 def quantiles_from_hist(hist: np.ndarray,
-                        qs: Sequence[float] = QUANTILES) -> dict:
+                        qs: Sequence[float] = QUANTILES,
+                        sums: np.ndarray | None = None) -> dict:
     """{"p50": ..., "p99": ..., "p999": ...} for one histogram row (or a
-    [kinds, buckets] matrix, which is first summed over kinds)."""
+    [kinds, buckets] matrix, which is first summed over kinds); pass the
+    matching ``hist_sum`` row as ``sums`` for sub-bucket precision."""
     hist = np.asarray(hist)
     if hist.ndim == 2:
         hist = hist.sum(axis=0)
-    return {QUANTILE_NAMES.get(q, f"p{q}"): quantile_from_hist(hist, q)
-            for q in qs}
+    if sums is not None:
+        sums = np.asarray(sums)
+        if sums.ndim == 2:
+            sums = sums.sum(axis=0)
+    return {QUANTILE_NAMES.get(q, f"p{q}"):
+            quantile_from_hist(hist, q, sums) for q in qs}
 
 
 def snapshot(obs: ObsState) -> dict:
@@ -83,10 +106,14 @@ def snapshot(obs: ObsState) -> dict:
     stacked = hist.ndim == 3
     t_pos = np.asarray(host.t_pos).reshape(-1)
     ev_count = np.asarray(host.ev_count).reshape(-1)
+    hist_sum = np.asarray(host.hist_sum)
+    ev_jobs = np.asarray(host.ev_jobs).reshape(-1)
     snap = {
         "hist": hist.sum(axis=0) if stacked else hist,
+        "hist_sum": hist_sum.sum(axis=0) if stacked else hist_sum,
         "t_pos": int(t_pos.sum()),
         "ev_count": int(ev_count.sum()),
+        "ev_jobs": int(ev_jobs.sum()),
         "t_pos_per_part": t_pos,
         "ev_count_per_part": ev_count,
         "timeline": np.asarray(host.timeline),
@@ -96,6 +123,7 @@ def snapshot(obs: ObsState) -> dict:
         "ev_moved": np.asarray(host.ev_moved),
         "ev_superseded": np.asarray(host.ev_superseded),
         "ev_io_us": np.asarray(host.ev_io_us),
+        "ev_kind": np.asarray(host.ev_kind),
         "n_partitions": hist.shape[0] if stacked else 1,
     }
     return snap
@@ -104,6 +132,13 @@ def snapshot(obs: ObsState) -> dict:
 def hist_delta(after: Mapping, before: Mapping) -> np.ndarray:
     return np.asarray(after["hist"], np.int64) - np.asarray(
         before["hist"], np.int64)
+
+
+def hist_sum_delta(after: Mapping, before: Mapping) -> np.ndarray:
+    """Delta of the per-bucket cost sums between two snapshots (pairs
+    with ``hist_delta`` to compute segment-local sums-aware quantiles)."""
+    return np.asarray(after["hist_sum"], np.float64) - np.asarray(
+        before["hist_sum"], np.float64)
 
 
 def _ring_order(count: int, length: int) -> np.ndarray:
@@ -131,6 +166,8 @@ def events_table(snap: Mapping) -> list:
         step, trig = leaf("ev_step"), leaf("ev_trigger")
         score, moved = leaf("ev_score"), leaf("ev_moved")
         sup, io = leaf("ev_superseded"), leaf("ev_io_us")
+        kind = (leaf("ev_kind") if "ev_kind" in snap
+                else np.zeros_like(step))
         per = np.asarray(snap.get("ev_count_per_part",
                                   snap["ev_count"])).reshape(-1)
         count = int(per[p]) if per.size > 1 else int(snap["ev_count"])
@@ -139,6 +176,7 @@ def events_table(snap: Mapping) -> list:
                 "partition": p,
                 "step": int(step[i]),
                 "trigger": TRIGGER_NAMES[int(trig[i])],
+                "kind": EVENT_KIND_NAMES[int(kind[i])],
                 "msc_score": float(score[i]),
                 "moved": int(moved[i]),
                 "superseded": int(sup[i]),
@@ -175,15 +213,18 @@ def to_records(snap: Mapping, meta: Mapping | None = None) -> Iterable[dict]:
            "n_partitions": snap.get("n_partitions", 1),
            **dict(meta or {})}
     hist = np.asarray(snap["hist"])
+    sums = (np.asarray(snap["hist_sum"]) if "hist_sum" in snap
+            else None)
     for k in range(N_KINDS):
         if hist[k].sum() == 0:
             continue
         yield {"record": "hist", "kind": KIND_NAMES[k],
                "counts": hist[k].tolist(),
-               **quantiles_from_hist(hist[k])}
+               **quantiles_from_hist(
+                   hist[k], sums=None if sums is None else sums[k])}
     yield {"record": "hist", "kind": "total",
            "counts": hist.sum(axis=0).tolist(),
-           **quantiles_from_hist(hist)}
+           **quantiles_from_hist(hist, sums=sums)}
     for row in timeline_table(snap):
         yield {"record": "step", **row}
     for row in events_table(snap):

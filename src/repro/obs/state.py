@@ -52,6 +52,14 @@ KIND_NAMES = ("put", "get", "delete", "scan", "tick")
 TRIG_RATE_LIMIT, TRIG_WATERMARK, TRIG_POLICY = 0, 1, 2
 TRIGGER_NAMES = ("rate_limit", "watermark", "policy")
 
+# compaction event-ring entry kinds.  Run-to-completion compactions log a
+# single "commit" per job (the legacy shape: ev_count == compactions).
+# With ``compaction_quantum > 0`` each job logs a "start" (zero io_us, the
+# trigger step) and each subsequent drained quantum a "resume" carrying
+# that quantum's io_us; the final quantum's entry is the "commit".
+EV_COMMIT, EV_START, EV_RESUME = 0, 1, 2
+EVENT_KIND_NAMES = ("commit", "start", "resume")
+
 # timeline row layout: [kind, n_ops, *Counters deltas].  Resolved
 # lazily (module __getattr__) so importing repro.obs does not pull in
 # repro.core before repro.core.engine has finished importing US.
@@ -92,6 +100,14 @@ class ObsState(NamedTuple):
     ev_superseded: jax.Array # i32[event_len] stale copies merged away
     ev_io_us: jax.Array      # f32[event_len] modeled compaction I/O
     ev_count: jax.Array      # i32: total events recorded (ring wraps)
+    # trailing fields (appended, defaulted nowhere -- init() builds them;
+    # vmapped merge-by-summation and donation treat them like the rest):
+    hist_sum: jax.Array      # f32[N_KINDS, n_buckets] per-bucket cost SUM
+                             # (mean = hist_sum / hist: sub-bucket percentile
+                             # interpolation, repro.obs.export)
+    ev_kind: jax.Array       # i32[event_len] EV_* entry kind
+    ev_jobs: jax.Array       # i32: compaction JOBS recorded (one per
+                             # trigger; == ev_count when quantum is off)
 
 
 def init(cfg: ObsConfig) -> ObsState:
@@ -108,6 +124,9 @@ def init(cfg: ObsConfig) -> ObsState:
         ev_superseded=jnp.zeros((e,), jnp.int32),
         ev_io_us=jnp.zeros((e,), jnp.float32),
         ev_count=jnp.zeros((), jnp.int32),
+        hist_sum=jnp.zeros((N_KINDS, cfg.n_buckets), jnp.float32),
+        ev_kind=jnp.zeros((e,), jnp.int32),
+        ev_jobs=jnp.zeros((), jnp.int32),
     )
 
 
@@ -147,22 +166,34 @@ def record_step(obs: ObsState, cfg: ObsConfig, *, kind: jax.Array,
     per_op = us / jnp.maximum(n_ops.astype(jnp.float32), 1.0)
     b = bucket_of_us(per_op, cfg.n_buckets)
     hist = obs.hist.at[kind, b].add(n_ops)
+    hist_sum = obs.hist_sum.at[kind, b].add(
+        per_op * n_ops.astype(jnp.float32))
     row = jnp.concatenate([
         jnp.stack([jnp.asarray(kind, jnp.int32), n_ops]),
         jnp.stack([jnp.asarray(v, jnp.int32) for v in delta])])
     timeline = obs.timeline.at[obs.t_pos % cfg.timeline_len].set(row)
-    return obs._replace(hist=hist, timeline=timeline,
+    return obs._replace(hist=hist, hist_sum=hist_sum, timeline=timeline,
                         t_pos=obs.t_pos + 1)
 
 
 def record_compaction(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
                       trigger: jax.Array,
-                      stats: "CompactionStats") -> ObsState:  # noqa: F821
+                      stats: "CompactionStats",  # noqa: F821
+                      kind: int = EV_COMMIT, new_job: bool = True,
+                      io_us: jax.Array | None = None) -> ObsState:
     """Append one compaction to the event ring (runs INSIDE the
     ``engine.maintenance`` while_loop body -- all scatter-sets, the ring
-    index is ``ev_count % event_len``)."""
+    index is ``ev_count % event_len``).
+
+    Run-to-completion keeps the defaults: one EV_COMMIT per job pricing
+    the whole migration.  The quantized path logs the trigger as an
+    EV_START with ``io_us=0.0`` (the step defers its migration cost into
+    the in-flight carry); ``new_job`` counts jobs (``ev_jobs``)
+    independently of ring entries."""
     i = obs.ev_count % cfg.event_len
     moved = stats.n_demoted + stats.n_promoted + stats.n_merged
+    if io_us is None:
+        io_us = compaction_io_us(stats, cfg.cost, cfg.fast_write_amp)
     return obs._replace(
         ev_step=obs.ev_step.at[i].set(jnp.asarray(step, jnp.int32)),
         ev_trigger=obs.ev_trigger.at[i].set(
@@ -172,6 +203,37 @@ def record_compaction(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
         ev_moved=obs.ev_moved.at[i].set(moved.astype(jnp.int32)),
         ev_superseded=obs.ev_superseded.at[i].set(
             stats.n_superseded.astype(jnp.int32)),
-        ev_io_us=obs.ev_io_us.at[i].set(
-            compaction_io_us(stats, cfg.cost, cfg.fast_write_amp)),
-        ev_count=obs.ev_count + 1)
+        ev_io_us=obs.ev_io_us.at[i].set(jnp.asarray(io_us, jnp.float32)),
+        ev_kind=obs.ev_kind.at[i].set(jnp.int32(kind)),
+        ev_count=obs.ev_count + 1,
+        ev_jobs=obs.ev_jobs + (1 if new_job else 0))
+
+
+def record_drain(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
+                 trigger: jax.Array, score: jax.Array, moved: jax.Array,
+                 io_us: jax.Array, done: jax.Array) -> ObsState:
+    """Append one drained compaction quantum to the event ring: EV_RESUME
+    while the job still has backlog, EV_COMMIT on the quantum that
+    finishes it.  Branchless masked ring write -- when ``moved == 0``
+    (nothing in flight this step) the scatter index is parked past the
+    ring (``mode="drop"``) and ``ev_count`` does not advance, so
+    drain-free steps leave the ring untouched bit-for-bit."""
+    write = moved > 0
+    i = jnp.where(write, obs.ev_count % cfg.event_len, cfg.event_len)
+    kind = jnp.where(done, jnp.int32(EV_COMMIT), jnp.int32(EV_RESUME))
+    at = lambda a: a.at[i]
+    return obs._replace(
+        ev_step=at(obs.ev_step).set(jnp.asarray(step, jnp.int32),
+                                    mode="drop"),
+        ev_trigger=at(obs.ev_trigger).set(
+            jnp.asarray(trigger, jnp.int32), mode="drop"),
+        ev_score=at(obs.ev_score).set(
+            jnp.asarray(score, jnp.float32), mode="drop"),
+        ev_moved=at(obs.ev_moved).set(moved.astype(jnp.int32),
+                                      mode="drop"),
+        ev_superseded=at(obs.ev_superseded).set(jnp.int32(0),
+                                                mode="drop"),
+        ev_io_us=at(obs.ev_io_us).set(jnp.asarray(io_us, jnp.float32),
+                                      mode="drop"),
+        ev_kind=at(obs.ev_kind).set(kind, mode="drop"),
+        ev_count=obs.ev_count + write.astype(jnp.int32))

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import compaction
 from repro.core import engine as engine_core
 from repro.core import paged_kv, policy
 from repro.obs import export as obs_export
@@ -120,6 +121,7 @@ def _tick(est: engine_core.EngineState, params, tokens, valid,
     mirror = paged_kv.movement_mirror(kv_cfg, backend=ecfg.backend,
                                       interpret=ecfg.interpret)
     ctr0 = est.tier.ctr
+    comp0 = est.comp
     kv = est.payload._replace(tier=est.tier)
     fpk = paged_kv.tail_page_keys(kv, kv_cfg)
     need = jnp.sum(valid.astype(jnp.int32))
@@ -131,13 +133,18 @@ def _tick(est: engine_core.EngineState, params, tokens, valid,
     logits, kv = paged_decode_step(mcfg, kv_cfg, params, kv, tokens,
                                    seq_ids, kv.seq_len, valid)
     est = est._replace(tier=kv.tier, payload=kv._replace(tier=None))
+    # quantized compaction: drain one micro-step of any in-flight
+    # migration after the decode, exactly like engine_step does
+    est = engine_core.drain_tick(est, ecfg)
     if ecfg.obs.enabled:
         # the decode tick is one op-kind row: its counter delta spans
         # maintenance AND the paged gather/append of the decode itself
+        delta = obs_plane.counter_delta(est.tier.ctr, ctr0)
+        if ecfg.compaction_quantum > 0:
+            delta = compaction.defer_adjust(delta, comp0, est.comp)
         est = est._replace(obs=obs_plane.record_step(
             est.obs, ecfg.obs, kind=jnp.int32(obs_plane.TICK),
-            n_ops=jnp.sum(valid.astype(jnp.int32)),
-            delta=obs_plane.counter_delta(est.tier.ctr, ctr0)))
+            n_ops=jnp.sum(valid.astype(jnp.int32)), delta=delta))
     return est, logits
 
 
@@ -150,17 +157,17 @@ class ServeEngine:
 
     def __init__(self, mcfg: ModelConfig, kv_cfg: PagedKVConfig, params,
                  seed: int = 0, pol_cfg: policy.PolicyConfig | None = None,
-                 backend: str = "reference", interpret: bool | None = None):
+                 backend: str = "reference", interpret: bool | None = None,
+                 compaction_quantum: int = 0):
         self.mcfg = mcfg
         self.cfg = kv_cfg
         self.params = params
         self.pol_cfg = pol_cfg or policy.PolicyConfig(
             epoch_ops=512, cooldown_ops=2048, read_heavy_frac=0.05,
             slow_tracked_frac=0.05)
-        self.ecfg = engine_core.EngineConfig(tier=kv_cfg.tier(),
-                                             pol=self.pol_cfg,
-                                             backend=backend,
-                                             interpret=interpret)
+        self.ecfg = engine_core.EngineConfig(
+            tier=kv_cfg.tier(), pol=self.pol_cfg, backend=backend,
+            interpret=interpret, compaction_quantum=compaction_quantum)
         kv = paged_kv.init(kv_cfg)
         self.est = engine_core.init(self.ecfg, jax.random.PRNGKey(seed),
                                     payload=kv._replace(tier=None),

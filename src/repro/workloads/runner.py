@@ -9,6 +9,13 @@ multi-tenant mixes.
 
 Per-step outputs are compact aggregates (``StepStats``), not the full
 value tensors, so T-batch segments don't materialize T*B*V floats.
+
+The whole ``EngineState`` is the scan carry, so the preemptible
+compaction carry (``EngineState.comp``, ``cfg.compaction_quantum > 0``)
+threads through segments for free: a job triggered in one batch drains
+across the following batches of the same dispatch -- and across
+successive ``run_workload`` calls, since the facade feeds the returned
+state back in.
 """
 from __future__ import annotations
 

@@ -140,6 +140,45 @@ def test_total_pool_copy_budget(hot_loop_hlo):
         f"{TOTAL_BUDGET})")
 
 
+@pytest.fixture(scope="module")
+def quantized_hlo():
+    """Same hot loop with preemptible compaction armed (quantum=8): the
+    drain works on inflight-cap-sized staging slices, never pool-shaped
+    tensors, so the copy budgets must hold unchanged."""
+    qcfg = ECFG._replace(compaction_quantum=8)
+    est = engine.init(qcfg, jax.random.PRNGKey(0))
+    ops = _stacked_ops(4)
+    fn = engine.jit_run_ops(qcfg)
+    return fn.lower(est, ops).compile().as_text()
+
+
+def test_quantized_per_step_pool_copy_budget(quantized_hlo):
+    skip = _unbounded_while_bodies(quantized_hlo)
+    slow, fast = [], []
+    for name, body in _blocks(quantized_hlo).items():
+        if name in skip:
+            continue
+        found = _pool_copies(body)
+        slow += found[SLOW]
+        fast += found[FAST]
+    assert len(slow) <= SLOW_STEP_BUDGET, (
+        f"{len(slow)} slow-pool copies per op step with quantized "
+        f"compaction (budget {SLOW_STEP_BUDGET}) -- the drain went "
+        "pool-shaped:\n" + "\n".join(slow[:12]))
+    assert len(fast) <= FAST_STEP_BUDGET, (
+        f"{len(fast)} fast-pool copies per op step with quantized "
+        f"compaction (budget {FAST_STEP_BUDGET}):\n"
+        + "\n".join(fast[:12]))
+
+
+def test_quantized_total_pool_copy_budget(quantized_hlo):
+    found = _pool_copies(quantized_hlo)
+    total = len(found[FAST]) + len(found[SLOW])
+    assert total <= TOTAL_BUDGET, (
+        f"{total} pool-shaped copies in the quantized module (budget "
+        f"{TOTAL_BUDGET})")
+
+
 def test_hot_loop_contains_no_pool_sized_sort(hot_loop_hlo):
     """No computation may sort a pool-sized tensor: index maintenance is
     incremental (merge_index_update) everywhere, including inside
