@@ -212,6 +212,15 @@ class RunResult:
                 + scan_s + tail_s + disp_s + wall_s)
 
 
+def merged_counters(db) -> dict:
+    """Facade counters as scalar ints.  ``PartitionedDB`` surfaces
+    per-partition counter VECTORS; the modeled-I/O and throughput math
+    wants the cross-partition totals (shared-nothing partitions sum,
+    exactly like the obs histograms merge by summation)."""
+    return {k: (sum(v) if isinstance(v, (list, tuple)) else v)
+            for k, v in db.counters.items()}
+
+
 def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
                  seed: int = 0, warmup_frac: float = 0.5,
                  fast_write_amp: float = 1.0) -> RunResult:
@@ -227,6 +236,13 @@ def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
     warmup).  Deterministic for a fixed ``seed``: the stream is
     device-sampled from one PRNGKey, so every reported counter is
     bit-reproducible run-to-run.
+
+    Works for ``PartitionedDB`` too (multi-tenant per-partition
+    schedules): ops are counted ONCE per executed lane across all
+    partitions (``n_ops = n_meas * batch * P``) while a collective
+    dispatch across the mesh is counted ONCE total -- NOT once per
+    partition, which would overstate ``dispatches_per_kop`` by P under
+    the sharded path; counters merge by summation.
     """
     if isinstance(work, W.PhaseSchedule):
         n_batches = W.total_batches(work)
@@ -241,10 +257,11 @@ def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
     db.reset_workload(seed=seed)
     has_obs = getattr(db.ecfg, "obs", None) is not None \
         and db.ecfg.obs.enabled
+    n_parts = getattr(db, "p", 1)
     t0 = time.time()
     if n_warm:
         db.run_workload(work, n_warm, batch)        # dispatch 1: warmup
-    base_ctr = db.counters                          # sync at the boundary
+    base_ctr = merged_counters(db)                  # sync at the boundary
     base_obs = db.obs_snapshot() if has_obs else None
     base_disp = db.dispatches
     t1 = time.time()
@@ -252,8 +269,9 @@ def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
     jax.block_until_ready(db.estate)
     t2 = time.time()
     wall = t2 - t0
-    n_ops = n_meas * batch
-    ctr = {k: v - base_ctr.get(k, 0) for k, v in db.counters.items()}
+    n_ops = n_meas * batch * n_parts
+    ctr = {k: v - base_ctr.get(k, 0)
+           for k, v in merged_counters(db).items()}
     disp = db.dispatches - base_disp
     io = io_time_s(ctr, fast_write_amp=fast_write_amp)
     extra = {"dispatches_per_kop": 1e3 * disp / max(n_ops, 1),

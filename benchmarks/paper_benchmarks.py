@@ -233,6 +233,85 @@ def fig11d_partitions(n_ops=8000, seed=0):
     return rows
 
 
+# ------------------------------------------------- mesh scale-out rows
+
+PARTITION_SCALE_PS = (1, 2, 4)
+
+
+def _bit_equal(a, b) -> bool:
+    """Bitwise equality of two pytrees (structure + every leaf)."""
+    import jax
+    la, sa = jax.tree.flatten(a)
+    lb, sb = jax.tree.flatten(b)
+    return sa == sb and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def partition_scale(n_ops=8000, seed=0):
+    """Mesh scale-out (the shard_map path): a fixed per-partition tenant
+    workload at P=1/2/4 partitions with ``mesh="auto"``, so total work
+    grows with P while the whole multi-tenant segment stays ONE
+    dispatch.  On a multi-device host (CI forces 4 via
+    ``--xla_force_host_platform_device_count``) partitions run on their
+    own devices and aggregate wall throughput (``wall_agg_kops``) must
+    rise monotonically P=1->2->4 -- the ``partition-scale`` claim.
+
+    The ``partition-scale-parity`` row is the safety half of the claim:
+    the SAME seeded segment (routed client batches + a per-tenant
+    YCSB-A run) through the P=1 vmap fallback vs an explicit 1-device
+    shard_map mesh must leave bit-identical engine state, counters,
+    drop counters and obs snapshots (``parity_ok=1``)."""
+    import jax
+
+    from repro.core.db import PART_AXIS, PartitionedDB
+    rows = []
+    ks = 1 << 12
+    cfg = H.make_cfg(key_space=ks, fast_frac=0.125, run_size=256,
+                     max_runs=32, tracker_slots=ks // 10, n_buckets=32)
+    n_batches = max(n_ops // BATCH, 2)
+    for p in PARTITION_SCALE_PS:
+        db = PartitionedDB(cfg, n_partitions=p, seed=seed,
+                           backend=H.DEFAULT_BACKEND, mesh="auto")
+        d = db.mesh.shape[PART_AXIS] if db.mesh is not None else 1
+        db.reset_workload(seed=seed)
+        db.run_workload(W.ycsb("A"), n_batches, BATCH)     # compile+warm
+        jax.block_until_ready(db.estate)
+        wall = float("inf")
+        for _ in range(2):                                 # best-of-2
+            t0 = time.time()
+            db.run_workload(W.ycsb("A"), n_batches, BATCH)
+            jax.block_until_ready(db.estate)
+            wall = min(wall, time.time() - t0)
+        n = n_batches * BATCH * p
+        rows.append(f"partition-scale-p{p},{1e6 * wall / n:.3f},"
+                    f"wall_agg_kops={n / wall / 1e3:.1f};"
+                    f"devices={d};partitions={p};"
+                    f"dropped={db.dropped};timing=1")
+
+    # parity: P=1 vmap vs P=1 shard_map, same seeded client + tenant ops
+    mesh1 = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), (PART_AXIS,))
+    pair = [PartitionedDB(cfg, n_partitions=1, seed=seed,
+                          backend=H.DEFAULT_BACKEND, mesh=m)
+            for m in (None, mesh1)]
+    for db in pair:
+        rng = np.random.default_rng(seed)            # same client stream
+        db.reset_workload(seed=seed)
+        for _ in range(4):
+            db.put(rng.integers(0, ks, BATCH).astype(np.int32))
+            db.get(rng.integers(0, ks, BATCH).astype(np.int32))
+        db.run_workload(W.ycsb("A"), n_batches, BATCH)
+        jax.block_until_ready(db.estate)
+    ok = (_bit_equal(pair[0].estate, pair[1].estate)
+          and pair[0].counters == pair[1].counters
+          and pair[0].dropped_per_partition
+          == pair[1].dropped_per_partition
+          and _bit_equal(pair[0].obs_snapshot(), pair[1].obs_snapshot()))
+    rows.append(f"partition-scale-parity,0.000,parity_ok={int(ok)};"
+                f"n_batches={n_batches};batch={BATCH}")
+    return rows
+
+
 # --------------------------------------------------------------- Table 5
 
 def table5_twitter(n_ops=24000, seed=0):
@@ -430,6 +509,7 @@ ALL = {
     "kernels": kernels_backend,
     "fig11c": fig11c_pinning_threshold,
     "fig11d": fig11d_partitions,
+    "partition-scale": partition_scale,
     "table5": table5_twitter,
     "fig12": fig12_power_of_k,
     "tail": tail_latency,
@@ -468,6 +548,9 @@ def expected_rows() -> dict:
         "fig11c": [f"fig11c-ycsb{wk}-pin{int(t * 100)}"
                    for wk in ("A", "B") for t in (0.1, 0.4, 0.7, 0.9)],
         "fig11d": [f"fig11d-partitions{p}" for p in (1, 2, 4, 8)],
+        "partition-scale": [f"partition-scale-p{p}"
+                            for p in PARTITION_SCALE_PS]
+        + ["partition-scale-parity"],
         "table5": [f"tbl5-{v}-{cl}" for cl in W.TWITTER_CLUSTERS
                    for v in ("prism", "lsm")],
         "fig12": [f"fig12-k{k}" for k in (1, 2, 8, 32)],

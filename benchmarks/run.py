@@ -339,6 +339,23 @@ def _validate(rows):
               all(r[k] == rows_q[0][k] for r in rows_q for k in eq_keys),
               "; ".join(f"{k}={rows_q[0][k]:.3f}" for k in eq_keys))
 
+    ps = {p: d.get(f"partition-scale-p{p}") for p in (1, 2, 4)}
+    if all(ps.values()):
+        kops = [ps[p]["wall_agg_kops"] for p in (1, 2, 4)]
+        devs = [ps[p]["devices"] for p in (1, 2, 4)]
+        claim("partition-scale: aggregate throughput rises monotonically "
+              "P=1->2->4 over the shard_map mesh (needs multi-device "
+              "host; CI forces 4 via xla_force_host_platform_device_count)",
+              kops[0] < kops[1] < kops[2],
+              f"agg_kops p1={kops[0]:.1f} p2={kops[1]:.1f} "
+              f"p4={kops[2]:.1f} on devices={[int(x) for x in devs]}")
+    if "partition-scale-parity" in d:
+        claim("partition-scale: P=1 shard_map bit-matches the vmap "
+              "fallback (state, counters, drops, obs snapshot)",
+              d["partition-scale-parity"].get("parity_ok") == 1,
+              f"parity_ok="
+              f"{d['partition-scale-parity'].get('parity_ok', 0):.0f}")
+
     sc = {k: v for k, v in d.items() if k.startswith("scenario-")}
     if sc:
         worst = max(v["dispatches_per_kop"] for v in sc.values())

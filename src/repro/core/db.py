@@ -15,12 +15,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import engine, policy, tiers
 from repro.core.engine import EngineConfig, OpBatch
 from repro.core.tiers import TierConfig
-from repro.core.utils import hash_mod
+from repro.core.utils import pack_buckets, part_of_key
 from repro.obs import export as obs_export
 from repro.obs.state import ObsConfig
+
+PART_AXIS = "part"          # mesh axis name for the partition dimension
 
 
 class PrismDB:
@@ -184,46 +188,107 @@ def route_batch(keys: jax.Array, p: int, per_part: int
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Scatter a batch into [P, per_part] padded per-partition batches.
 
-    Returns (routed, valid, n_dropped): keys beyond ``per_part`` in one
-    partition do not fit the pad and are counted, never silently lost.
-    """
-    part = hash_mod(keys, p, salt=4)
-    order = jnp.argsort(part)
-    keys_s, part_s = keys[order], part[order]
-    rank = jnp.arange(keys.shape[0]) - jnp.searchsorted(
-        part_s, part_s, side="left")
-    out = jnp.full((p, per_part), -1, jnp.int32)
-    ok = rank < per_part
-    tgt_p = jnp.where(ok, part_s, p)          # overflow scatters out of range
-    out = out.at[tgt_p, jnp.clip(rank, 0, per_part - 1)].set(
-        keys_s, mode="drop")
-    dropped = jnp.sum((~ok).astype(jnp.int32))
-    return out, out >= 0, dropped
+    Returns (routed, valid, dropped): keys beyond ``per_part`` in one
+    partition do not fit the pad and are counted in the PER-PARTITION
+    ``dropped`` i32[P] vector, never silently lost -- a skewed tenant
+    whose keys pile onto one partition is visible as that partition's
+    drop count, not a global blur.  The partition hash is
+    ``utils.part_of_key`` (splitmix-style mix, then modulo): the mix
+    step avalanches every input bit, so structured key patterns
+    (sequential ranges, strided tenants) can't alias onto one partition
+    the way a plain ``key % p`` would.  The mesh-sharded exchange
+    (``distributed.collectives.exchange_keys``) uses the SAME hash, so
+    both routing paths agree on key placement bit-for-bit."""
+    part = part_of_key(keys, p)
+    return pack_buckets(keys, part, p, per_part)
 
 
-def _partitioned_step(estate, keys, kind: int, cfg: EngineConfig, p: int,
-                      per_part: int):
-    """Route + vmapped engine_step: one dispatch for the whole batch."""
-    routed, valid, dropped = route_batch(keys, p, per_part)
+def _vmapped_op(estate, routed, valid, kind, cfg: EngineConfig):
+    """vmap ``engine_step`` over the leading partition axis of
+    ``estate`` / ``routed`` / ``valid``; shared by both routing paths."""
     vals = jnp.broadcast_to(
         routed[..., None].astype(jnp.float32),
         (*routed.shape, cfg.tier.value_width))
     op = OpBatch(kind=jnp.int32(kind), keys=routed, vals=vals, valid=valid,
                  aux=jnp.zeros_like(routed))
     step = functools.partial(engine.engine_step, cfg=cfg)
-    estate, res = jax.vmap(step, in_axes=(0, OpBatch(None, 0, 0, 0, 0)))(
+    return jax.vmap(step, in_axes=(0, OpBatch(None, 0, 0, 0, 0)))(
         estate, op)
+
+
+def _partitioned_step(estate, keys, kind: int, cfg: EngineConfig, p: int,
+                      per_part: int):
+    """Route + vmapped engine_step: one dispatch for the whole batch."""
+    routed, valid, dropped = route_batch(keys, p, per_part)
+    estate, res = _vmapped_op(estate, routed, valid, kind, cfg)
     return estate, res, dropped
 
 
+def _mesh_step(estate, keys, valid, kind, cfg: EngineConfig, p: int,
+               lp: int, cap: int):
+    """One routed client batch INSIDE shard_map: the device-side ragged
+    exchange sends every key to its owning partition, then the local
+    partitions (``lp`` per device) run the same vmapped ``engine_step``
+    as the fallback path.  One dispatch, N devices, no host scatter."""
+    from repro.distributed import collectives
+    routed, rvalid, dropped = collectives.exchange_keys(
+        keys, n_parts=p, cap=cap, axis_name=cfg.mesh_axis,
+        local_parts=lp, valid=valid)
+    estate, res = _vmapped_op(estate, routed, rvalid, kind, cfg)
+    return estate, res, dropped
+
+
+def resolve_mesh(mesh, n_partitions: int):
+    """Resolve the ``mesh`` constructor arg of ``PartitionedDB``.
+
+    ``None`` -> single-device vmap fallback.  ``"auto"`` -> a 1-D
+    ``Mesh`` over the largest device count that divides ``n_partitions``
+    (1 device -> ``None``: the vmap path IS the P=1/no-mesh fallback).
+    A ``jax.sharding.Mesh`` is validated (must carry a ``part`` axis
+    whose size divides ``n_partitions``) and used as given."""
+    if mesh is None:
+        return None
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"mesh={mesh!r}: expected None, 'auto' or a "
+                             "jax.sharding.Mesh")
+        devs = jax.devices()
+        d = max(k for k in range(1, min(n_partitions, len(devs)) + 1)
+                if n_partitions % k == 0)
+        if d == 1:
+            return None
+        return jax.sharding.Mesh(np.asarray(devs[:d]), (PART_AXIS,))
+    if PART_AXIS not in mesh.axis_names:
+        raise ValueError(f"mesh must have a '{PART_AXIS}' axis, got "
+                         f"{mesh.axis_names}")
+    d = mesh.shape[PART_AXIS]
+    if n_partitions % d != 0:
+        raise ValueError(f"{d} mesh devices must divide "
+                         f"{n_partitions} partitions")
+    return mesh
+
+
 class PartitionedDB:
-    """Shared-nothing partitions via vmap (paper §4.1, Fig. 11d).
+    """Shared-nothing partitions (paper §4.1, Fig. 11d): vmap on one
+    device, ``shard_map`` over a device mesh when one is available.
 
     Keys are routed by hash; every partition executes the same jitted
     ``engine_step`` on its own slice (masked for load imbalance within the
     batch).  ``dropped`` counts keys that exceeded a partition's pad --
-    surfaced, not silently lost.
-    """
+    surfaced per partition, not silently lost.
+
+    ``mesh``: ``None`` = the single-device vmap path (the P=1/no-mesh
+    fallback, bit-exact against the sharded path); ``"auto"`` (default) =
+    shard over the largest available device count dividing
+    ``n_partitions`` (falls back to vmap on one device, so the default
+    changes nothing in single-device environments); or an explicit
+    ``jax.sharding.Mesh`` with a ``part`` axis.  On a mesh, each device
+    owns ``n_partitions / D`` partitions' full engine state (sharded via
+    the size-aware ``part`` logical-axis rule), a client batch is split
+    across devices, and the ragged all_to_all exchange in
+    ``distributed.collectives`` hash-routes every key to its owning
+    partition entirely device-side: one dispatch per batch across N
+    devices, no host-side scatter/gather."""
 
     def __init__(self, cfg: TierConfig, n_partitions: int, seed: int = 0,
                  promote: bool = True,
@@ -231,22 +296,34 @@ class PartitionedDB:
                  backend: str = "reference",
                  interpret: bool | None = None,
                  obs: ObsConfig | None = None,
-                 compaction_quantum: int = 0):
+                 compaction_quantum: int = 0,
+                 mesh="auto"):
         self.cfg = cfg
         self.p = n_partitions
+        self.mesh = resolve_mesh(mesh, n_partitions)
+        self.lp = (n_partitions // self.mesh.shape[PART_AXIS]
+                   if self.mesh is not None else n_partitions)
         self.ecfg = EngineConfig(
             tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
             backend=backend, interpret=interpret,
             obs=obs if obs is not None else ObsConfig(),
-            compaction_quantum=compaction_quantum)
+            compaction_quantum=compaction_quantum,
+            mesh_axis=PART_AXIS if self.mesh is not None else None)
         rngs = jax.random.split(jax.random.PRNGKey(seed), n_partitions)
         self.estate = jax.vmap(
             functools.partial(engine.init, self.ecfg))(rngs)
-        self._dropped = jnp.zeros((), jnp.int32)
-        self._step = jax.jit(
-            functools.partial(_partitioned_step, cfg=self.ecfg,
-                              p=n_partitions),
-            static_argnames=("kind", "per_part"))
+        self._dropped = jnp.zeros((n_partitions,), jnp.int32)
+        if self.mesh is not None:
+            from repro.distributed import sharding as shd
+            self._shardings = shd.leading_axis_sharding(self.estate,
+                                                        self.mesh)
+            self.estate = jax.device_put(self.estate, self._shardings)
+            self._mesh_steps = {}
+        else:
+            self._step = jax.jit(
+                functools.partial(_partitioned_step, cfg=self.ecfg,
+                                  p=n_partitions),
+                static_argnames=("kind", "per_part"))
         self.dispatches = 0
 
     @property
@@ -257,13 +334,53 @@ class PartitionedDB:
     @property
     def dropped(self) -> int:
         """Total keys that exceeded a partition pad (routing overflow)."""
-        return int(self._dropped)
+        return int(jnp.sum(self._dropped))
+
+    @property
+    def dropped_per_partition(self) -> list:
+        """Routing-overflow drops per partition: a skewed tenant whose
+        keys alias onto one partition shows up HERE (the global total
+        hides exactly that failure mode)."""
+        return [int(x) for x in np.asarray(self._dropped)]
+
+    def _mesh_dispatch(self, keys, kind: int):
+        """Routed client batch over the mesh: pad the batch to the
+        device count, shard it, exchange device-side, step.  The
+        (padded-width, capacity) pair keys a small jit cache -- client
+        batch sizes are few and static in practice."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        d = self.mesh.shape[PART_AXIS]
+        b = keys.shape[0]
+        bpad = -(-b // d) * d
+        # same capacity policy as the vmap path's route_batch pad (at
+        # D=1 the layouts are bit-identical: the parity tests pin it)
+        cap = max(2 * (bpad // d) // self.p, 8)
+        fn = self._mesh_steps.get((bpad, cap))
+        if fn is None:
+            local = functools.partial(_mesh_step, cfg=self.ecfg, p=self.p,
+                                      lp=self.lp, cap=cap)
+            sm = shard_map(
+                local, mesh=self.mesh,
+                in_specs=(P(PART_AXIS), P(PART_AXIS), P(PART_AXIS), P()),
+                out_specs=(P(PART_AXIS), P(PART_AXIS), P()),
+                check_rep=False)
+            fn = jax.jit(sm, donate_argnums=(0,))
+            self._mesh_steps[(bpad, cap)] = fn
+        kpad = jnp.zeros((bpad,), jnp.int32).at[:b].set(keys)
+        vpad = jnp.zeros((bpad,), bool).at[:b].set(True)
+        self.estate, res, dropped = fn(self.estate, kpad, vpad,
+                                       jnp.int32(kind))
+        return res, dropped
 
     def _dispatch(self, keys, kind: int):
         keys = jnp.asarray(keys, jnp.int32)
-        per = max(2 * keys.shape[0] // self.p, 8)
-        self.estate, res, dropped = self._step(self.estate, keys, kind=kind,
-                                               per_part=per)
+        if self.mesh is not None:
+            res, dropped = self._mesh_dispatch(keys, kind)
+        else:
+            per = max(2 * keys.shape[0] // self.p, 8)
+            self.estate, res, dropped = self._step(
+                self.estate, keys, kind=kind, per_part=per)
         self._dropped = self._dropped + dropped
         self.dispatches += 1
         return res
@@ -281,6 +398,17 @@ class PartitionedDB:
         self._gen = jax.vmap(lambda _: workloads.init_gen(
             self.cfg.key_space))(jnp.arange(self.p))
         self._wrng = jax.random.split(jax.random.PRNGKey(seed), self.p)
+        if self.mesh is not None:
+            # commit generator/rng state to the mesh UP FRONT: the first
+            # dispatch's outputs come back part-sharded, and a jit cache
+            # keys on input shardings -- uncommitted inputs here would buy
+            # a full recompile on the SECOND run_workload call
+            from repro.distributed import sharding as shd
+            self._gen = jax.device_put(
+                self._gen, shd.leading_axis_sharding(self._gen, self.mesh))
+            self._wrng = jax.device_put(
+                self._wrng,
+                shd.leading_axis_sharding(self._wrng, self.mesh))
         self._wt = 0
 
     def run_workload(self, works, n_batches: int, batch: int):
@@ -303,7 +431,14 @@ class PartitionedDB:
         assert len(set(counts)) == 1, \
             f"tenant schedules must have equal phase counts, got {counts}"
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *scheds)
-        fn = workloads.jit_run_tenants(self.ecfg, n_batches, batch)
+        if self.mesh is not None:
+            # tenant i IS partition i: schedules pin to their partition's
+            # device, the whole multi-tenant segment is one shard_map
+            # dispatch across the mesh, no cross-partition traffic
+            fn = workloads.jit_run_tenants_sharded(
+                self.ecfg, n_batches, batch, self.mesh)
+        else:
+            fn = workloads.jit_run_tenants(self.ecfg, n_batches, batch)
         self.estate, self._gen, self._wrng, stats = fn(
             self.estate, self._gen, self._wrng, stacked, t0=self._wt)
         self._wt += n_batches
@@ -316,7 +451,10 @@ class PartitionedDB:
                 for k, v in self.estate.tier.ctr._asdict().items()}
 
     def obs_snapshot(self) -> dict:
-        """Merged cross-partition snapshot: the vmapped per-partition
-        histograms sum (the reason the obs plane uses histograms, not
-        reservoirs); timelines/event rings stay per partition."""
+        """Merged cross-partition snapshot: the per-partition histograms
+        sum (the reason the obs plane uses histograms, not reservoirs);
+        timelines/event rings stay per partition.  Mesh-sharded states
+        merge the same way -- the single ``device_get`` gathers the
+        ``part``-sharded leaves across the mesh, so the vmapped and
+        shard_map paths produce identical snapshots."""
         return obs_export.snapshot(self.estate.obs)

@@ -95,6 +95,18 @@ class EngineConfig(NamedTuple):
                                 # static (hashable) so enabled/sizes key
                                 # the jit caches.  The ObsState rides in
                                 # EngineState: zero extra dispatches
+    mesh_axis: str | None = None  # shard_map mesh axis this engine runs
+                                # under (None = single device / vmap).
+                                # The engine step itself is shared-nothing
+                                # -- no collective ever appears in the
+                                # hot loop; the axis name is what the
+                                # FACADE's routing collectives
+                                # (distributed.collectives.exchange_keys:
+                                # the ragged all_to_all + the per-
+                                # partition drop psum) key on, and being
+                                # part of the config it keys every jit
+                                # cache so sharded and unsharded tracings
+                                # of the same tier config never alias
     compaction_quantum: int = 0  # >0: preemptible micro-step compaction.
                                 # A triggered job still COMMITS its
                                 # logical transition at the trigger (so

@@ -35,6 +35,60 @@ def hash_mod(keys: jax.Array, n: int, salt: int = 0) -> jax.Array:
     return (hash_u32(keys, salt) % jnp.uint32(n)).astype(jnp.int32)
 
 
+def mix32(x: jax.Array, salt: int = 0) -> jax.Array:
+    """Splitmix-style 32-bit finalizer (murmur3 fmix32 constants): every
+    input bit avalanches into every output bit.  Stronger than
+    ``hash_u32``'s xorshift-multiply -- used where aliasing would
+    CONCENTRATE load (partition routing: a skewed tenant whose hot keys
+    collide onto one partition turns shared-nothing scaling into a
+    single-partition hotspot)."""
+    x = x.astype(jnp.uint32) ^ jnp.uint32((salt * 0x9E3779B9) & 0xFFFFFFFF)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def part_of_key(keys: jax.Array, n_parts: int, salt: int = 4) -> jax.Array:
+    """Owning partition of each key: splitmix-mixed hash mod ``n_parts``.
+
+    The SINGLE source of truth for key->partition placement: the vmapped
+    ``route_batch`` and the mesh-sharded device-side exchange
+    (``distributed.collectives.exchange_keys``) must agree bit-for-bit,
+    or a key routed under one path is unreachable under the other."""
+    return (mix32(keys, salt) % jnp.uint32(n_parts)).astype(jnp.int32)
+
+
+def pack_buckets(keys: jax.Array, part: jax.Array, n: int, cap: int,
+                 valid: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Scatter a batch into ``[n, cap]`` fixed-capacity per-destination
+    buckets, preserving in-batch order within each bucket (stable sort).
+
+    Returns ``(buckets, bucket_valid, dropped)``: overflow beyond ``cap``
+    in one bucket is counted in the PER-DESTINATION ``dropped`` i32[n]
+    vector, never silently lost.  ``valid=None`` treats every lane live;
+    invalid lanes land nowhere and count nowhere."""
+    b = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((b,), bool)
+    # invalid lanes sort to the end of an out-of-range group: they can
+    # neither occupy a bucket slot nor inflate a real group's ranks
+    part = jnp.where(valid, part, n)
+    order = jnp.argsort(part)                   # stable: in-batch order
+    keys_s, part_s = keys[order], part[order]
+    rank = jnp.arange(b) - jnp.searchsorted(part_s, part_s, side="left")
+    out = jnp.full((n, cap), -1, jnp.int32)
+    ok = rank < cap
+    tgt = jnp.where(ok, part_s, n)              # overflow scatters away
+    out = out.at[tgt, jnp.clip(rank, 0, cap - 1)].set(keys_s, mode="drop")
+    dropped = jnp.zeros((n,), jnp.int32).at[part_s].add(
+        (~ok).astype(jnp.int32), mode="drop")
+    return out, out >= 0, dropped
+
+
 def sorted_lookup(index_keys: jax.Array, index_vals: jax.Array,
                   query: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Look up ``query`` keys in a PADKEY-padded sorted index.

@@ -38,6 +38,10 @@ DEFAULT_RULES = {
     # paged kv pools
     "pages": "data",
     "page_tokens": None,
+    # shared-nothing PartitionedDB shards: the leading partition axis of
+    # every EngineState leaf maps onto the "part" mesh axis (size-aware:
+    # P partitions shard over D devices only when D divides P)
+    "part": "part",
 }
 
 _state = threading.local()
@@ -139,3 +143,16 @@ def named_sharding_tree(specs, shapes, mesh):
         lambda sp: jax.sharding.NamedSharding(mesh, sp),
         spec_tree(specs, shapes, mesh),
         is_leaf=lambda s: isinstance(s, P))
+
+
+def leading_axis_sharding(tree, mesh, logical: str = "part"):
+    """NamedShardings that shard every leaf's LEADING axis by ``logical``
+    (rest replicated) -- the layout of a stacked per-partition
+    ``EngineState`` over the partition mesh.  Size-aware via the same
+    rules as everything else: a leaf whose leading dim the mesh axis
+    does not divide stays replicated rather than padded."""
+    def one(x):
+        spec = logical_to_spec((logical,) + (None,) * (x.ndim - 1), mesh,
+                               shape=x.shape)
+        return jax.sharding.NamedSharding(mesh, spec)
+    return jax.tree.map(one, tree)

@@ -100,7 +100,12 @@ def snapshot(obs: ObsState) -> dict:
     on every leaf): stacked states are merged -- histograms, ring
     positions and event counts by summation (the reason histograms were
     chosen over reservoirs), timelines and event rings kept per
-    partition under ``per_partition``."""
+    partition under ``per_partition``.  Mesh-sharded states (the
+    ``shard_map`` PartitionedDB path shards the same leading partition
+    axis over a device mesh) need no special case: the ``device_get``
+    gathers every ``part``-sharded leaf across the mesh into the same
+    stacked layout, so vmapped and sharded snapshots are bit-identical
+    (pinned by ``tests/test_partitioned_mesh.py``)."""
     host = jax.device_get(obs)
     hist = np.asarray(host.hist)
     stacked = hist.ndim == 3

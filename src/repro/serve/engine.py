@@ -165,9 +165,12 @@ class ServeEngine:
         self.pol_cfg = pol_cfg or policy.PolicyConfig(
             epoch_ops=512, cooldown_ops=2048, read_heavy_frac=0.05,
             slow_tracked_frac=0.05)
+        # serve stays single-device: one page pool, no partition mesh
+        # (scale-out of the KV store goes through PartitionedDB(mesh=...))
         self.ecfg = engine_core.EngineConfig(
             tier=kv_cfg.tier(), pol=self.pol_cfg, backend=backend,
-            interpret=interpret, compaction_quantum=compaction_quantum)
+            interpret=interpret, compaction_quantum=compaction_quantum,
+            mesh_axis=None)
         kv = paged_kv.init(kv_cfg)
         self.est = engine_core.init(self.ecfg, jax.random.PRNGKey(seed),
                                     payload=kv._replace(tier=None),

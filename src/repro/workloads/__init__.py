@@ -18,8 +18,9 @@ from repro.workloads.schedule import (PhaseSchedule,  # noqa: F401
                                       as_schedule, n_phases, schedule,
                                       spec_at, total_batches)
 from repro.workloads.runner import (StepStats, jit_run_schedule,  # noqa: F401
-                                    jit_run_tenants, run_schedule,
-                                    run_tenants)
+                                    jit_run_tenants,
+                                    jit_run_tenants_sharded, run_schedule,
+                                    run_tenants, run_tenants_sharded)
 from repro.workloads.trace import pack_trace, unpack_trace  # noqa: F401
 from repro.workloads.specs import (SCENARIOS, TWITTER_CLUSTERS,  # noqa: F401
                                    YCSB_KINDS, scenario, twitter, ycsb)

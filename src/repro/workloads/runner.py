@@ -104,3 +104,44 @@ def jit_run_tenants(cfg: engine.EngineConfig, n_batches: int, batch: int,
     fn = functools.partial(run_tenants, cfg=cfg, n_batches=n_batches,
                            batch=batch)
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def run_tenants_sharded(estates: engine.EngineState, gsts: GenState,
+                        rngs: jax.Array, scheds: PhaseSchedule,
+                        cfg: engine.EngineConfig, mesh, *,
+                        n_batches: int, batch: int,
+                        t0: jax.Array | int = 0):
+    """``run_tenants`` over a device mesh: the P-leading inputs are
+    sharded on the mesh's partition axis (``cfg.mesh_axis``) and each
+    device runs the local vmap over its own P/D tenants under
+    ``shard_map`` -- generation + execution of every tenant's whole
+    segment is ONE dispatch across N devices.  Tenant segments are
+    shared-nothing (tenant i is pinned to partition i), so no collective
+    appears in the loop and the result is bit-identical to the vmapped
+    ``run_tenants`` on one device -- the mesh parity tests pin it."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    axis = cfg.mesh_axis
+    fn = functools.partial(run_schedule, cfg=cfg, n_batches=n_batches,
+                           batch=batch)
+
+    def local(est, g, r, sch, t0):
+        return jax.vmap(functools.partial(fn, t0=t0))(est, g, r, sch)
+
+    spec, rep = P(axis), P()
+    sm = shard_map(local, mesh=mesh,
+                   in_specs=(spec, spec, spec, spec, rep),
+                   out_specs=(spec, spec, spec, spec),
+                   check_rep=False)
+    return sm(estates, gsts, rngs, scheds, jnp.asarray(t0, jnp.int32))
+
+
+@functools.lru_cache(maxsize=256)
+def jit_run_tenants_sharded(cfg: engine.EngineConfig, n_batches: int,
+                            batch: int, mesh, donate: bool = True):
+    """Jitted ``run_tenants_sharded``; the mesh is part of the cache key
+    (``jax.sharding.Mesh`` is hashable), so facades sharing a config AND
+    a mesh share compiles."""
+    fn = functools.partial(run_tenants_sharded, cfg=cfg, mesh=mesh,
+                           n_batches=n_batches, batch=batch)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())

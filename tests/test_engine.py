@@ -144,7 +144,9 @@ def test_policy_cooldown_blocks_read_compactions():
 def test_route_batch_counts_overflow():
     keys = jnp.asarray(np.arange(64), jnp.int32)
     routed, valid, dropped = route_batch(keys, 4, 8)
-    assert int(valid.sum()) + int(dropped) == 64
+    # dropped is per-DESTINATION-partition; totals still conserve ops
+    assert dropped.shape == (4,)
+    assert int(valid.sum()) + int(dropped.sum()) == 64
     # routed keys are a subset of the input, no invented keys
     got = np.asarray(routed)[np.asarray(valid)]
     assert set(got.tolist()) <= set(range(64))

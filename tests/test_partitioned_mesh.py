@@ -1,0 +1,134 @@
+"""shard_map <-> vmap parity for PartitionedDB.
+
+The mesh path (device-side ragged all_to_all routing + per-device
+engine vmap under shard_map) must be BIT-identical to the single-device
+vmap path: same hash, same capacity policy, and in-batch-order bucket
+packing mean the two layouts coincide exactly.  P=1 parity runs
+everywhere (an explicit 1-device mesh vs the vmap fallback); the P>1
+cases need >= 4 devices and run in CI's mesh-smoke job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import workloads as W
+from repro.core import TierConfig
+from repro.core.db import PART_AXIS, PartitionedDB, resolve_mesh
+
+CFG = TierConfig(key_space=1 << 12, fast_slots=256, slow_slots=1 << 12,
+                 value_width=1, max_runs=32, run_size=128,
+                 bloom_bits_per_run=1 << 11, tracker_slots=512,
+                 n_buckets=16, pin_threshold=0.1)
+
+needs_4_devices = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (CI mesh-smoke forces 4 via XLA_FLAGS)")
+
+
+def mesh_of(n):
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]), (PART_AXIS,))
+
+
+def tree_equal(a, b) -> bool:
+    la, sa = jax.tree.flatten(a)
+    lb, sb = jax.tree.flatten(b)
+    return sa == sb and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def drive(db, seed=0, wk="A", n_batches=6, batch=64):
+    """The same seeded segment every parity test replays: routed client
+    batches followed by a per-tenant workload run."""
+    rng = np.random.default_rng(seed)
+    ks = CFG.key_space
+    for _ in range(3):
+        db.put(rng.integers(0, ks, batch).astype(np.int32))
+        db.get(rng.integers(0, ks, batch).astype(np.int32))
+    db.reset_workload(seed=seed)
+    db.run_workload(W.ycsb(wk), n_batches, batch)
+    jax.block_until_ready(db.estate)
+
+
+def assert_parity(a, b):
+    assert a.counters == b.counters
+    assert a.dropped_per_partition == b.dropped_per_partition
+    assert tree_equal(a.state, b.state)          # tier pools, bit for bit
+    assert tree_equal(a.estate.pol, b.estate.pol)
+    assert tree_equal(a.obs_snapshot(), b.obs_snapshot())
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("wk", ["A", "E"])
+def test_p1_shard_map_matches_vmap(backend, wk):
+    """P=1: an explicit 1-device mesh vs the vmap fallback, YCSB-A (point
+    ops) and YCSB-E (real range scans), both engine backends."""
+    dbs = [PartitionedDB(CFG, n_partitions=1, seed=0, backend=backend,
+                         mesh=m) for m in (None, mesh_of(1))]
+    assert dbs[0].mesh is None and dbs[1].mesh is not None
+    for db in dbs:
+        drive(db, wk=wk)
+    assert_parity(*dbs)
+
+
+@needs_4_devices
+def test_p4_shard_map_matches_vmap():
+    """P=4 over 4 devices: hash-routing fans every client batch across
+    the whole mesh (real all_to_all traffic), per-tenant mixes differ
+    per partition."""
+    dbs = [PartitionedDB(CFG, n_partitions=4, seed=0, mesh=m)
+           for m in (None, mesh_of(4))]
+    works = [W.ycsb(k) for k in ("A", "B", "C", "E")]
+    for db in dbs:
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            db.put(rng.integers(0, CFG.key_space, 128).astype(np.int32))
+            db.get(rng.integers(0, CFG.key_space, 128).astype(np.int32))
+        db.reset_workload(seed=0)
+        db.run_workload(works, 6, 64)
+        jax.block_until_ready(db.estate)
+    assert_parity(*dbs)
+
+
+@needs_4_devices
+def test_p8_local_parts_matches_vmap():
+    """P=8 over 4 devices (2 partitions per device): the local_parts > 1
+    layout of the ragged exchange still matches the vmap path."""
+    dbs = [PartitionedDB(CFG, n_partitions=8, seed=0, mesh=m)
+           for m in (None, mesh_of(4))]
+    assert dbs[1].lp == 2
+    for db in dbs:
+        rng = np.random.default_rng(0)
+        for _ in range(4):
+            db.put(rng.integers(0, CFG.key_space, 256).astype(np.int32))
+            db.get(rng.integers(0, CFG.key_space, 256).astype(np.int32))
+    assert_parity(*dbs)
+
+
+@needs_4_devices
+def test_mesh_per_partition_drop_accounting():
+    """A fully-skewed batch (identical keys) aliases onto ONE partition:
+    overflow drops land on that partition's counter on BOTH paths, and
+    executed + dropped conserves the batch."""
+    dbs = [PartitionedDB(CFG, n_partitions=4, seed=0, mesh=m)
+           for m in (None, mesh_of(4))]
+    for db in dbs:
+        db.put(np.full(64, 5, np.int32))
+    assert dbs[0].dropped_per_partition == dbs[1].dropped_per_partition
+    assert dbs[0].dropped == dbs[1].dropped > 0
+    per = dbs[1].dropped_per_partition
+    assert sum(1 for x in per if x > 0) == 1     # concentrated, visible
+
+
+@needs_4_devices
+def test_resolve_mesh_auto():
+    """auto: largest device count dividing P; 1 device -> vmap fallback."""
+    assert resolve_mesh("auto", 4).shape[PART_AXIS] == 4
+    assert resolve_mesh("auto", 8).shape[PART_AXIS] == 4
+    assert resolve_mesh("auto", 3).shape[PART_AXIS] == 3
+    assert resolve_mesh("auto", 1) is None
+    assert resolve_mesh(None, 4) is None
+    with pytest.raises(ValueError):
+        resolve_mesh("nope", 4)
