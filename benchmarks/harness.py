@@ -21,8 +21,10 @@ import numpy as np
 from repro import workloads as W
 from repro.core import PrismDB, TierConfig, policy
 from repro.obs import export as obs_export
-from repro.obs.cost import COST
+from repro.obs.cost import CostModel
 from repro.obs.state import ObsConfig
+
+_COST = CostModel()   # Table-1 defaults; engines carry their own instance
 
 
 # --------------------------------------------------------- device model
@@ -35,11 +37,11 @@ class DeviceModel:
     the device-resident obs plane buckets per-op costs from the same
     numbers, so the histogram quantiles and ``io_time_s`` can never
     drift apart."""
-    fast_read_us: float = COST.fast_read_us        # Optane 4KB random read
-    fast_write_us: float = COST.fast_write_us
-    slow_read_us: float = COST.slow_read_us        # QLC 4KB random read
-    slow_seq_read_us_per_obj: float = COST.slow_seq_read_us_per_obj
-    slow_seq_write_us_per_obj: float = COST.slow_seq_write_us_per_obj
+    fast_read_us: float = _COST.fast_read_us       # Optane 4KB random read
+    fast_write_us: float = _COST.fast_write_us
+    slow_read_us: float = _COST.slow_read_us       # QLC 4KB random read
+    slow_seq_read_us_per_obj: float = _COST.slow_seq_read_us_per_obj
+    slow_seq_write_us_per_obj: float = _COST.slow_seq_write_us_per_obj
 
 
 DEVICES = DeviceModel()
@@ -213,12 +215,36 @@ class RunResult:
 
 
 def merged_counters(db) -> dict:
-    """Facade counters as scalar ints.  ``PartitionedDB`` surfaces
-    per-partition counter VECTORS; the modeled-I/O and throughput math
-    wants the cross-partition totals (shared-nothing partitions sum,
-    exactly like the obs histograms merge by summation)."""
-    return {k: (sum(v) if isinstance(v, (list, tuple)) else v)
-            for k, v in db.counters.items()}
+    """Facade counters as ints (scalars) / per-tier int lists (the
+    ``*_by_tier`` vector counters).  ``PartitionedDB`` surfaces
+    per-partition values; the modeled-I/O and throughput math wants the
+    cross-partition totals (shared-nothing partitions sum, exactly like
+    the obs histograms merge by summation) -- summed over the PARTITION
+    axis only, so per-tier vectors stay vectors."""
+    parts = getattr(db, "p", None)
+    out = {}
+    for k, v in db.counters.items():
+        if parts is None:
+            out[k] = v
+        elif v and isinstance(v[0], list):      # [P][T] -> [T]
+            out[k] = [sum(col) for col in zip(*v)]
+        else:                                   # [P] -> scalar
+            out[k] = sum(v)
+    return out
+
+
+def counter_delta(after: dict, before: dict) -> dict:
+    """Elementwise ``after - before`` over ``merged_counters`` dicts
+    (scalars subtract, per-tier lists subtract elementwise)."""
+    out = {}
+    for k, v in after.items():
+        b = before.get(k)
+        if isinstance(v, list):
+            b = b if isinstance(b, list) else [0] * len(v)
+            out[k] = [x - y for x, y in zip(v, b)]
+        else:
+            out[k] = v - (b or 0)
+    return out
 
 
 def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
@@ -270,8 +296,7 @@ def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
     t2 = time.time()
     wall = t2 - t0
     n_ops = n_meas * batch * n_parts
-    ctr = {k: v - base_ctr.get(k, 0)
-           for k, v in merged_counters(db).items()}
+    ctr = counter_delta(merged_counters(db), base_ctr)
     disp = db.dispatches - base_disp
     io = io_time_s(ctr, fast_write_amp=fast_write_amp)
     extra = {"dispatches_per_kop": 1e3 * disp / max(n_ops, 1),
@@ -292,6 +317,9 @@ def run_workload(db: PrismDB, work, name: str, n_batches: int, batch: int,
         # start/resume/commit entries per job, but ev_jobs counts one
         # per trigger in both modes (== ctr.compactions)
         extra["comp_events"] = snap["ev_jobs"] - base_obs["ev_jobs"]
+        extra["ev_jobs_b"] = [
+            int(x) for x in (np.asarray(snap["ev_jobs_b"])
+                             - np.asarray(base_obs["ev_jobs_b"]))]
     return RunResult(name=name, n_ops=n_ops, wall_s=wall,
                      compact_cpu_s=0.0, io_s=io, counters=ctr, extra=extra)
 

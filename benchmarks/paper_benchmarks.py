@@ -25,9 +25,10 @@ BATCH = 256
 
 
 def _cfg(fast_frac=0.125, **kw):
-    return H.make_cfg(key_space=KS, fast_frac=fast_frac, run_size=512,
-                      max_runs=64, tracker_slots=KS // 10, n_buckets=64,
-                      **kw)
+    kw.setdefault("run_size", 512)
+    kw.setdefault("max_runs", 64)
+    return H.make_cfg(key_space=KS, fast_frac=fast_frac,
+                      tracker_slots=KS // 10, n_buckets=64, **kw)
 
 
 def _workload(kind: str, key_space: int, n_batches: int, zipf: float):
@@ -482,6 +483,89 @@ def tail_amortized(n_ops=16000, seed=0):
     return rows
 
 
+# ------------------------------------------------------------ tier sweep
+
+# per-object cost-per-bit weights of the modeled media (§2 spectrum):
+# DRAM 2x XPoint, XPoint 4x QLC.  Both sweep configs spend the SAME
+# total budget: the 2-tier row puts the whole fast budget into XPoint
+# (the paper's Optane/QLC pair); the 3-tier row splits it half/half
+# into a DRAM slice (at 2x the per-bit price -> half the slots) and an
+# XPoint slice, with the QLC capacity unchanged:
+#   2-tier:  8*(KS/8)            + 1*KS = 2*KS
+#   3-tier:  16*(KS/32) + 8*(KS/16) + 1*KS = 2*KS
+TIER_SWEEP_DRAM = (0.2, 0.2, 0.2, 0.2)
+TIER_SWEEP_XPOINT = (6.0, 10.0, 0.5, 1.0)
+TIER_SWEEP_QLC = (391.0, 391.0, 0.5, 1.0)
+
+# smaller runs than the default _cfg: the engine pre-drains each middle
+# tier to 2*run_size free slots before a slab merge, and the 3-tier
+# DRAM slice is only KS/32 slots -- run_size=512 would drain it whole.
+# max_runs=256 keeps max_runs*run_size >= the QLC pool so the run
+# directory can't starve before capacity does.  (CI's tier-matrix job
+# builds its smoke configs from these same kwargs.)
+TIER_SWEEP_CFG_KW = dict(run_size=128, max_runs=256)
+
+
+def _tier_row(r, slots):
+    """RunResult row + per-tier hit counts and slot capacities, per-
+    boundary compaction job counts, and per-boundary event-ring job
+    counts (the tier-sweep claim's conservation + density oracle).
+    Capacities ride along because the "hot -> cold" claim is per-SLOT
+    hit density: the bottom tier holds nearly the whole key space, so
+    its zipf tail out-masses a thin middle band in raw hits."""
+    c = r.counters
+    hb = c.get("hits_by_tier") or [c["hits_fast"], c["hits_slow"]]
+    cb = c.get("comp_by_boundary") or [c.get("compactions", 0)]
+    eb = r.extra.get("ev_jobs_b", [])
+    return (r.row()
+            + "".join(f";hits_t{i}={int(v)}" for i, v in enumerate(hb))
+            + "".join(f";slots_t{i}={int(v)}" for i, v in enumerate(slots))
+            + "".join(f";comp_b{i}={int(v)}" for i, v in enumerate(cb))
+            + "".join(f";ev_b{i}={int(v)}" for i, v in enumerate(eb))
+            + f";n_tiers={len(hb)}")
+
+
+def tier_sweep(n_ops=16000, seed=0):
+    """N-tier storage plane end-to-end: a 3-tier DRAM/XPoint/QLC config
+    vs the 2-tier Optane/QLC pair at equal modeled cost-per-bit (see the
+    budget identity above), same YCSB-A segment.  The 2-tier row runs
+    through the EXPLICIT tier-list API (``tier_slots`` + a per-tier cost
+    vector) -- the N=2 parity test pins that path to the legacy pair
+    engine, so this row doubles as the "tier-list engine is the engine"
+    demonstration; the 3-tier row exercises the deep run-to-run boundary
+    (watermark-triggered ``compact_boundary`` jobs, logged per boundary
+    in the event ring)."""
+    from repro.core import PrismDB, policy as pol_mod
+    from repro.obs.cost import CostModel
+    from repro.obs.state import ObsConfig
+    pol = pol_mod.PolicyConfig(epoch_ops=1024, cooldown_ops=16384,
+                               read_heavy_frac=0.8, slow_tracked_frac=0.3,
+                               detect_ops=1024)
+    configs = {
+        "tier-sweep-n2": (
+            (KS // 8, KS),
+            CostModel(tiers=(TIER_SWEEP_XPOINT, TIER_SWEEP_QLC))),
+        "tier-sweep-n3": (
+            (KS // 32, KS // 16, KS),
+            CostModel(tiers=(TIER_SWEEP_DRAM, TIER_SWEEP_XPOINT,
+                             TIER_SWEEP_QLC))),
+    }
+    rows = []
+    for nm, (slots, cost) in configs.items():
+        cfg = _cfg(fast_frac=slots[0] / KS, tier_slots=slots,
+                   **TIER_SWEEP_CFG_KW)
+        db = PrismDB(cfg, seed=seed, pol_cfg=pol,
+                     backend=H.DEFAULT_BACKEND,
+                     obs=ObsConfig(cost=cost))
+        H.preload(db, cfg.key_space, frac=0.5, seed=seed + 1)
+        n_batches = max(n_ops // BATCH, 2)
+        work = _workload("A", cfg.key_space, n_batches, 0.99)
+        r = H.run_workload(db, work, nm, n_batches=n_batches, batch=BATCH,
+                           seed=seed)
+        rows.append(_tier_row(r, slots))
+    return rows
+
+
 # --------------------------------------------------------------- Fig. 12
 
 def fig12_power_of_k(n_ops=24000, seed=0):
@@ -514,6 +598,7 @@ ALL = {
     "fig12": fig12_power_of_k,
     "tail": tail_latency,
     "tail-amortized": tail_amortized,
+    "tier-sweep": tier_sweep,
 }
 
 
@@ -558,6 +643,7 @@ def expected_rows() -> dict:
         "tail-amortized": [f"tail-amortized-{wk}-{qnm}"
                            for wk in ("flash-crowd", "delete-churn")
                            for qnm, _ in TAIL_AMORTIZED_QUANTA],
+        "tier-sweep": ["tier-sweep-n2", "tier-sweep-n3"],
     }
     assert set(names) == set(ALL), "expected_rows out of sync with ALL"
     return names

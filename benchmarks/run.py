@@ -356,6 +356,39 @@ def _validate(rows):
               f"parity_ok="
               f"{d['partition-scale-parity'].get('parity_ok', 0):.0f}")
 
+    ts = {k: v for k, v in d.items() if k.startswith("tier-sweep")}
+    for nm, v in sorted(ts.items()):
+        n = int(v.get("n_tiers", 0))
+        hits = [v.get(f"hits_t{i}", -1) for i in range(n)]
+        slots = [v.get(f"slots_t{i}", 0) for i in range(n)]
+        # per-SLOT density, not raw hits: the bottom tier holds nearly
+        # the whole key space, so its zipf tail out-masses a thin
+        # middle band in raw counts even under perfect placement
+        dens = [h / max(s, 1) for h, s in zip(hits, slots)]
+        claim(f"tier-sweep: {nm} monotone per-slot hit density "
+              f"hot -> cold",
+              n >= 2 and hits[0] > 0
+              and all(dens[i] >= dens[i + 1] for i in range(n - 1)),
+              "density=" + "/".join(f"{x:.3f}" for x in dens)
+              + f" hits={[int(h) for h in hits]}")
+        cons = all(v.get(f"ev_b{b}", -1) == v.get(f"comp_b{b}", -2)
+                   for b in range(n - 1))
+        claim(f"tier-sweep: {nm} per-boundary event jobs == compactions",
+              cons and v.get("comp_events", -1) == v.get("compactions", -2),
+              "; ".join(f"b{b}: ev={v.get(f'ev_b{b}', -1):.0f} "
+                        f"comp={v.get(f'comp_b{b}', -1):.0f}"
+                        for b in range(max(n - 1, 1))))
+    if ts:
+        n3 = d.get("tier-sweep-n3", {})
+        claim("tier-sweep: 3-tier config ran end-to-end with deep-"
+              "boundary compactions",
+              int(n3.get("n_tiers", 0)) == 3
+              and n3.get("comp_b1", 0) > 0
+              and n3.get("hist_mass", -1) == n3.get("n_ops", -2),
+              f"n_tiers={n3.get('n_tiers', 0):.0f} "
+              f"comp_b1={n3.get('comp_b1', 0):.0f} "
+              f"hist_mass={n3.get('hist_mass', 0):.0f}")
+
     sc = {k: v for k, v in d.items() if k.startswith("scenario-")}
     if sc:
         worst = max(v["dispatches_per_kop"] for v in sc.values())

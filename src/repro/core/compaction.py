@@ -25,7 +25,7 @@ from jax import lax
 
 from repro.core import bloom, mapper, msc, tracker
 from repro.core.tiers import (Counters, TierConfig, TierState, bucket_of,
-                              fast_occupancy)
+                              fast_occupancy, run_of_keys)
 from repro.core.utils import (PADKEY, alloc_slots, merge_index_update,
                               segment_in_range, sorted_lookup)
 
@@ -36,17 +36,25 @@ class Movement(NamedTuple):
     The core tracks keys/placement; payload arrays (KV pages, embedding
     rows) live outside and replay these moves (the tier_compact kernel's
     job on TPU).  All arrays static-size, masked by *_valid.
+
+    ``boundary`` names the adjacent-tier boundary the movement crosses:
+    ``m_src_tier`` values are then the boundary's upper (== boundary) or
+    lower (== boundary + 1) tier index, and destinations live in the
+    lower tier.  Boundary 0 keeps the historical 0=fast / 1=slow
+    encoding.  The kernels still see plain (src, dst) pool pairs -- the
+    ``kernels.tier_compact.ops`` wrapper selects the boundary's pools.
     """
-    m_src_tier: jax.Array   # i32[cap_f+cap_s] 0=fast 1=slow (merged writes)
+    m_src_tier: jax.Array   # i32[cap_f+cap_s] source tier per merged write
     m_src_slot: jax.Array   # i32[cap_f+cap_s] source slot in its tier
-    m_dst_slot: jax.Array   # i32[cap_f+cap_s] destination slow-tier slot
+    m_dst_slot: jax.Array   # i32[cap_f+cap_s] destination lower-tier slot
     m_valid: jax.Array      # bool
-    p_src_slot: jax.Array   # i32[cap_s] promotion source (slow tier)
-    p_dst_slot: jax.Array   # i32[cap_s] promotion destination (fast tier)
+    p_src_slot: jax.Array   # i32[cap_s] promotion source (lower tier)
+    p_dst_slot: jax.Array   # i32[cap_s] promotion destination (upper tier)
     p_valid: jax.Array      # bool
     m_key: jax.Array = ()   # i32[cap_f+cap_s] merged keys, sorted (PADKEY
                             # pad) -- the in-flight carry's lookup key for
                             # dual reads against a half-migrated range
+    boundary: jax.Array = ()  # i32 scalar: which adjacent-tier boundary
 
 
 class CompactionStats(NamedTuple):
@@ -165,6 +173,11 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
     promote_want = (sm & ~superseded & stracked & fully_pinned
                     & (sclock >= cfg.promote_min_clock)) if promote \
         else jnp.zeros_like(sm)
+    if cfg.n_tiers > 2:
+        # tier-1 tombstone ROWS (deep-boundary delete carriers) are not
+        # data: never promote them back to the slab tier
+        stomb = state.tombs[0][sslots]
+        promote_want = promote_want & ~stomb
     rank = jnp.cumsum(promote_want.astype(jnp.int32)) - 1
     promote_want = promote_want & (rank < n_dem_total)
     pro_slots = alloc_slots(fast_keys, promote_want)
@@ -184,7 +197,22 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
     survive = sm & ~superseded & ~pro_ok
 
     # ---- merge (sorted; PADKEY sorts to the tail) ------------------------
-    mkeys = jnp.concatenate([jnp.where(demote_data, fkeys, PADKEY),
+    if cfg.n_tiers > 2:
+        # A tier-0 tombstone cannot simply vanish at boundary 0 when a
+        # copy may survive in tiers >= 2: bloom-positive-anywhere-deeper
+        # tombstones ride the merge into tier 1 as tombstone ROWS
+        # (paper §6 generalized; dropped once no deeper tier remains).
+        # Surviving tier-1 tombstone rows are likewise dropped as soon
+        # as every deeper bloom goes negative.
+        deeper_f = _maybe_deeper(state, cfg, fkeys, below=1)
+        deeper_s = _maybe_deeper(state, cfg, skeys, below=1)
+        tomb_keep = demote & tomb & deeper_f
+        survive = survive & (~stomb | deeper_s)
+        f_half = demote_data | tomb_keep
+        mtomb_half = jnp.concatenate([tomb_keep, stomb & survive])
+    else:
+        f_half = demote_data
+    mkeys = jnp.concatenate([jnp.where(f_half, fkeys, PADKEY),
                              jnp.where(survive, skeys, PADKEY)])
     mvals = jnp.concatenate([state.fast_vals[fslots], state.slow_vals[sslots]])
     order = jnp.argsort(mkeys)
@@ -220,6 +248,10 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
     stgt = jnp.where(wrote, new_slots, slow_keys.shape[0])
     slow_keys = slow_keys.at[stgt].set(mkeys, mode="drop")
     slow_vals = state.slow_vals.at[stgt].set(mvals, mode="drop")
+    if cfg.n_tiers > 2:
+        mtomb = mtomb_half[order]
+        tombs0 = jnp.where(in_window, False, state.tombs[0])
+        tombs0 = tombs0.at[stgt].set(mtomb, mode="drop")
 
     run_active = state.run_active.at[win_rids].set(False, mode="drop")
     run_count = state.run_count.at[win_rids].set(0, mode="drop")
@@ -289,15 +321,18 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
     n_dem = jnp.sum(demote_data.astype(jnp.int32))
     n_pro = jnp.sum(pro_ok.astype(jnp.int32))
     n_sup = jnp.sum(superseded.astype(jnp.int32))
+    nt = cfg.n_tiers
+    rinc = jnp.zeros((nt,), jnp.int32).at[0].set(n_dem).at[1].set(t_f)
+    winc = jnp.zeros((nt,), jnp.int32).at[0].set(n_pro).at[1].set(n_merged)
+    crinc = jnp.zeros((nt,), jnp.int32).at[1].set(t_f)
     ctr = state.ctr._replace(
         compactions=state.ctr.compactions + 1,
         demoted=state.ctr.demoted + n_dem,
         promoted=state.ctr.promoted + n_pro,
-        slow_reads=state.ctr.slow_reads + t_f,
-        comp_reads=state.ctr.comp_reads + t_f,
-        slow_writes=state.ctr.slow_writes + n_merged,
-        fast_reads=state.ctr.fast_reads + n_dem,
-        fast_writes=state.ctr.fast_writes + n_pro,
+        reads=state.ctr.reads + rinc,
+        comp_reads=state.ctr.comp_reads + crinc,
+        writes=state.ctr.writes + winc,
+        comp_by_boundary=state.ctr.comp_by_boundary.at[0].add(1),
         rate_limited=state.ctr.rate_limited
         + jnp.sum((mvalid & ~wrote).astype(jnp.int32)),
     )
@@ -307,7 +342,7 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
         n_demoted=n_dem, n_promoted=n_pro, n_merged=n_merged,
         n_superseded=n_sup, n_run_read=t_f, n_run_written=n_merged)
 
-    new_state = state._replace(
+    new_state = state.update(
         fast_keys=fast_keys, fast_vals=fast_vals, fast_ver=fast_ver,
         fidx_keys=fidx_keys, fidx_slots=fidx_slots,
         slow_keys=slow_keys, slow_vals=slow_vals, slow_run=slow_run,
@@ -316,6 +351,9 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
         run_active=run_active, blooms=blooms, tracker=trk,
         bucket_fast=bucket_fast, bucket_slow=bucket_slow,
         bucket_overlap=bucket_overlap, ctr=ctr)
+    if cfg.n_tiers > 2:
+        new_state = new_state._replace(
+            tombs=(tombs0,) + state.tombs[1:])
     if not with_movement:
         return new_state, stats
     src_tier = jnp.concatenate([jnp.zeros_like(fslots),
@@ -329,7 +367,8 @@ def compact_once(state: TierState, cfg: TierConfig, rng: jax.Array,
         p_src_slot=jnp.where(pro_ok, sslots, -1).astype(jnp.int32),
         p_dst_slot=jnp.where(pro_ok, pro_slots, -1).astype(jnp.int32),
         p_valid=pro_ok,
-        m_key=mkeys.astype(jnp.int32))
+        m_key=mkeys.astype(jnp.int32),
+        boundary=jnp.zeros((), jnp.int32))
     return new_state, stats, mv
 
 
@@ -388,6 +427,9 @@ class InFlight(NamedTuple):
     m_dst_slot: jax.Array       # i32[capm] destination slow slot (-1 none)
     m_done: jax.Array           # i32: drained merge-row cursor (latest job)
     m_total: jax.Array          # i32: latest job's merged-row count
+    boundary: jax.Array = ()    # i32: latest job's boundary (quantized
+    #                             jobs are always boundary 0 today; deep
+    #                             boundary merges run to completion)
 
 
 def inflight_cap(cfg: TierConfig) -> int:
@@ -406,7 +448,7 @@ def init_inflight(cfg: TierConfig) -> InFlight:
         m_src_tier=jnp.zeros((capm,), jnp.int32),
         m_src_slot=jnp.zeros((capm,), jnp.int32),
         m_dst_slot=jnp.full((capm,), -1, jnp.int32),
-        m_done=z, m_total=z)
+        m_done=z, m_total=z, boundary=z)
 
 
 def stage_inflight(fl: InFlight, stats: CompactionStats, mv: Movement,
@@ -432,7 +474,8 @@ def stage_inflight(fl: InFlight, stats: CompactionStats, mv: Movement,
         trigger=jnp.asarray(trigger, jnp.int32),
         m_key=mv.m_key, m_src_tier=mv.m_src_tier,
         m_src_slot=mv.m_src_slot, m_dst_slot=mv.m_dst_slot,
-        m_done=jnp.zeros((), jnp.int32), m_total=stats.n_merged)
+        m_done=jnp.zeros((), jnp.int32), m_total=stats.n_merged,
+        boundary=jnp.zeros((), jnp.int32))
 
 
 def _movers(backend: str, interpret: bool | None):
@@ -517,7 +560,7 @@ def drain_quantum(state: TierState, fl: InFlight, quantum: int, *,
         rem_fast_read=fl.rem_fast_read - d_fr,
         rem_fast_write=fl.rem_fast_write - d_fw,
         m_done=jnp.minimum(fl.m_done + k, fl.m_total))
-    return (state._replace(slow_vals=slow_vals), fl,
+    return (state.update(slow_vals=slow_vals), fl,
             (d_rr, d_rw, d_fr, d_fw), k)
 
 
@@ -564,9 +607,277 @@ def defer_adjust(delta: Counters, before: InFlight,
     n_rw = after.rem_run_written - before.rem_run_written
     n_fr = after.rem_fast_read - before.rem_fast_read
     n_fw = after.rem_fast_write - before.rem_fast_write
+    # quantized jobs are boundary-0: defer tier-0 random and tier-1
+    # sequential categories (values identical to the pair-era scalars)
     return delta._replace(
-        slow_reads=delta.slow_reads - n_rr,
-        comp_reads=delta.comp_reads - n_rr,
-        slow_writes=delta.slow_writes - n_rw,
-        fast_reads=delta.fast_reads - n_fr,
-        fast_writes=delta.fast_writes - n_fw)
+        reads=delta.reads.at[0].add(-n_fr).at[1].add(-n_rr),
+        comp_reads=delta.comp_reads.at[1].add(-n_rr),
+        writes=delta.writes.at[0].add(-n_fw).at[1].add(-n_rw))
+
+
+# ----------------------------------------------- deep (run-to-run) merges
+#
+# Boundaries >= 1 connect two run-structured tiers: there is no slab, no
+# clock tracker, no pin/promote decision (paper §5.3 promotion always
+# targets tier i-1 of the SLAB boundary -- hot objects climb one level
+# per compaction, and only boundary 0 has the popularity signal), so a
+# deep compaction is a plain LSM-style merge: pick the upper-tier run
+# whose migration buys the most bytes per unit of boundary-priced I/O,
+# merge it with every overlapping lower-tier run, and append the result
+# as fresh lower-tier sub-runs.
+
+
+def _maybe_deeper(state: TierState, cfg: TierConfig, keys: jax.Array,
+                  below: int) -> jax.Array:
+    """OR of per-tier bloom answers over every tier STRICTLY below
+    ``below`` -- "may a copy of this key survive deeper than tier
+    ``below``?".  Drives tombstone retention during merges."""
+    m = jnp.zeros(keys.shape, bool)
+    for t in range(below + 1, cfg.n_tiers):
+        rid = run_of_keys(state, keys, tier=t)
+        m = m | bloom.query_per_key(state.dir_blooms[t - 1], rid, keys)
+    return m
+
+
+def compact_boundary(state: TierState, cfg: TierConfig, boundary: int, *,
+                     cost=None,
+                     cap_up: int | None = None,
+                     cap_lo: int | None = None,
+                     with_movement: bool = False):
+    """One deep compaction at static ``boundary`` (>= 1): migrate the
+    best-scoring tier-``boundary`` run down into tier ``boundary + 1``.
+
+    Selection scores every active upper run with THIS boundary's cost
+    coefficients (``msc.select_boundary_run``); the merge then
+
+      1. reads the selected run's rows (sequential upper-tier I/O) and
+         every overlapping lower run's rows (sequential lower-tier I/O);
+      2. drops lower copies superseded by the migrating run, drops
+         tombstone rows whose key is bloom-negative in every deeper
+         tier, carries the rest of the tombstones down;
+      3. merge-sorts the survivors into fresh lower-tier sub-runs of
+         <= ``run_size`` (new Blooms, directory entries, incremental
+         index maintenance on BOTH tiers -- no pool-sized re-sorts).
+
+    Counters: both windows land in per-tier ``reads``/``comp_reads``,
+    the output in ``writes[boundary+1]``, and the job increments
+    ``comp_by_boundary[boundary]``.  Returns ``(state', stats[, mv])``
+    with ``stats.n_run_read`` covering BOTH windows (the obs plane
+    prices the whole event with ``compaction_io_us(boundary=...)``;
+    ``cost.boundary_io_us`` is the exact split when the caller keeps the
+    windows separate)."""
+    assert boundary >= 1, "boundary 0 is compact_once's slab merge"
+    u, l = boundary, boundary + 1
+    du, dl = u - 1, l - 1
+    # upper window = ONE run, and runs are written as sub-runs of
+    # <= run_size everywhere, so 2x is already an upper bound.  The lower
+    # window is every overlapped run: a wide upper run can overlap ALL of
+    # them, and truncating the window while freeing the sources wholesale
+    # would lose rows -- cap it at the exact static bound instead.
+    cap_up = cap_up or 2 * cfg.run_size
+    cap_lo = cap_lo or min(cfg.tier_sizes[l],
+                           cfg.max_runs * cfg.run_size)
+    r = cfg.max_runs
+    nl = state.keys[l].shape[0]
+
+    rid, lo, hi, score, ov = msc.select_boundary_run(
+        state, cfg, boundary, cost=cost)
+    # output hull: the selected range plus every overlapped lower run's
+    # range (lower runs are mutually disjoint and each intersects
+    # [lo, hi), so the hull contains no foreign lower run)
+    out_lo = jnp.minimum(lo, jnp.min(jnp.where(ov, state.dir_lo[dl],
+                                               PADKEY)))
+    out_hi = jnp.maximum(hi, jnp.max(jnp.where(ov, state.dir_hi[dl],
+                                               -1)))
+
+    # ---- upper window: the selected run's rows --------------------------
+    upos, um = segment_in_range(state.idx_keys[u], lo, hi, cap_up)
+    ukeys = jnp.where(um, state.idx_keys[u][upos], PADKEY)
+    uslots = jnp.where(um, state.idx_slots[u][upos], 0)
+    utomb = (state.tombs[du][uslots] if state.tombs
+             else jnp.zeros_like(um)) & um
+
+    # ---- lower window: all rows of the overlapped runs ------------------
+    lpos, lm = segment_in_range(state.idx_keys[l], out_lo, out_hi, cap_lo)
+    lkeys = jnp.where(lm, state.idx_keys[l][lpos], PADKEY)
+    lslots = jnp.where(lm, state.idx_slots[l][lpos], 0)
+    ltomb = (state.tombs[dl][lslots] if state.tombs
+             else jnp.zeros_like(lm)) & lm
+    _, in_up = sorted_lookup(state.idx_keys[u], state.idx_slots[u], lkeys)
+    superseded = in_up & lm & (lkeys >= lo) & (lkeys < hi)
+
+    # ---- tombstone retention --------------------------------------------
+    if l == cfg.n_tiers - 1:
+        keep_ut = jnp.zeros_like(um)
+        keep_lt = jnp.zeros_like(lm)
+    else:
+        keep_ut = _maybe_deeper(state, cfg, ukeys, below=l)
+        keep_lt = _maybe_deeper(state, cfg, lkeys, below=l)
+    ukeep = um & (~utomb | keep_ut)
+    lkeep = lm & ~superseded & (~ltomb | keep_lt)
+
+    # ---- merge-sort into <= run_size sub-runs ---------------------------
+    mkeys = jnp.concatenate([jnp.where(ukeep, ukeys, PADKEY),
+                             jnp.where(lkeep, lkeys, PADKEY)])
+    mvals = jnp.concatenate([state.vals[u][uslots],
+                             state.vals[l][lslots]])
+    mtomb = jnp.concatenate([utomb & ukeep, ltomb & lkeep])
+    order = jnp.argsort(mkeys)
+    mkeys, mvals, mtomb = mkeys[order], mvals[order], mtomb[order]
+    mvalid = mkeys != PADKEY
+    n_merged = jnp.sum(mvalid.astype(jnp.int32))
+
+    # ---- free the sources -----------------------------------------------
+    in_up_win = state.runs[du] == rid
+    up_keys = jnp.where(in_up_win, -1, state.keys[u])
+    up_runs = jnp.where(in_up_win, -1, state.runs[du])
+    uidx_keys, uidx_slots = merge_index_update(
+        state.idx_keys[u], state.idx_slots[u], in_up_win,
+        jnp.full((1,), PADKEY, jnp.int32), jnp.full((1,), -1, jnp.int32),
+        jnp.zeros((1,), bool))
+    udir_act = state.dir_active[du].at[rid].set(False)
+    udir_cnt = state.dir_count[du].at[rid].set(0)
+
+    lrun = state.runs[dl]
+    in_lo_win = (lrun >= 0) & ov[jnp.clip(lrun, 0, r - 1)]
+    lo_keys = jnp.where(in_lo_win, -1, state.keys[l])
+    lo_runs = jnp.where(in_lo_win, -1, lrun)
+
+    # ---- write merged output into the lower tier ------------------------
+    m_total = mkeys.shape[0]
+    n_sub = max(m_total // cfg.run_size, 1) + 1
+    rank = jnp.cumsum(mvalid.astype(jnp.int32)) - 1
+    sub_of = jnp.where(mvalid, rank // cfg.run_size,
+                       n_sub - 1).astype(jnp.int32)
+    new_slots = alloc_slots(lo_keys, mvalid)
+    wrote = mvalid & (new_slots >= 0)
+    stgt = jnp.where(wrote, new_slots, nl)
+    lo_keys = lo_keys.at[stgt].set(mkeys, mode="drop")
+    lo_vals = state.vals[l].at[stgt].set(mvals, mode="drop")
+
+    ldir_act = state.dir_active[dl].at[
+        jnp.where(ov, jnp.arange(r), r)].set(False, mode="drop")
+    ldir_cnt = state.dir_count[dl].at[
+        jnp.where(ov, jnp.arange(r), r)].set(0, mode="drop")
+    ldir_lo, ldir_hi = state.dir_lo[dl], state.dir_hi[dl]
+    free_rids = jnp.nonzero(~ldir_act, size=n_sub, fill_value=r)[0] \
+        .astype(jnp.int32)
+    lo_runs = lo_runs.at[stgt].set(
+        free_rids[jnp.clip(sub_of, 0, n_sub - 1)], mode="drop")
+    lidx_keys, lidx_slots = merge_index_update(
+        state.idx_keys[l], state.idx_slots[l], in_lo_win, mkeys,
+        new_slots, wrote)
+
+    sub_counts = jnp.zeros((n_sub,), jnp.int32).at[sub_of].add(
+        wrote.astype(jnp.int32))
+    sub_first = jnp.full((n_sub,), PADKEY, jnp.int32).at[sub_of].min(
+        jnp.where(wrote, mkeys, PADKEY))
+    sub_lo = jnp.where(jnp.arange(n_sub) == 0, out_lo, sub_first)
+    nxt_first = jnp.concatenate([sub_first[1:],
+                                 jnp.array([PADKEY], jnp.int32)])
+    sub_hi = jnp.minimum(nxt_first, out_hi)
+    sub_ok = sub_counts > 0
+    dir_tgt = jnp.where(sub_ok, free_rids, r)
+    ldir_act = ldir_act.at[dir_tgt].set(True, mode="drop")
+    ldir_lo = ldir_lo.at[dir_tgt].set(sub_lo, mode="drop")
+    ldir_hi = ldir_hi.at[dir_tgt].set(sub_hi, mode="drop")
+    ldir_cnt = ldir_cnt.at[dir_tgt].set(sub_counts, mode="drop")
+    # fori_loop, not a static unroll: n_sub scales with the (pool-sized)
+    # lower window cap, and valid rows form a contiguous sorted prefix,
+    # so sub-run j's rows are exactly positions [j*run_size, (j+1)*
+    # run_size) -- a dynamic_slice keeps each bloom build run-sized.
+    # dynamic_slice clamps the tail start, which can only ADD foreign
+    # keys to the last row (bloom false positives: safe).
+    def _bloom_body(j, bl):
+        ks = lax.dynamic_slice(mkeys, (j * cfg.run_size,),
+                               (cfg.run_size,))
+        vm = lax.dynamic_slice(wrote, (j * cfg.run_size,),
+                               (cfg.run_size,))
+        return lax.cond(
+            sub_ok[j],
+            lambda b: bloom.set_run(b, free_rids[j], ks, vm),
+            lambda b: b, bl)
+
+    lblooms = lax.fori_loop(0, n_sub, _bloom_body, state.dir_blooms[dl])
+
+    # ---- tombstone marks ------------------------------------------------
+    if state.tombs:
+        utombs = jnp.where(in_up_win, False, state.tombs[du])
+        ltombs = jnp.where(in_lo_win, False, state.tombs[dl])
+        ltombs = ltombs.at[stgt].set(mtomb, mode="drop")
+        tombs = (state.tombs[:du] + (utombs,) + (ltombs,)
+                 + state.tombs[dl + 1:])
+    else:
+        tombs = state.tombs
+
+    # ---- counters -------------------------------------------------------
+    nt = cfg.n_tiers
+    t_u = jnp.sum(um.astype(jnp.int32))
+    t_l = jnp.sum(lm.astype(jnp.int32))
+    rinc = jnp.zeros((nt,), jnp.int32).at[u].set(t_u).at[l].set(t_l)
+    winc = jnp.zeros((nt,), jnp.int32).at[l].set(n_merged)
+    ctr = state.ctr._replace(
+        compactions=state.ctr.compactions + 1,
+        reads=state.ctr.reads + rinc,
+        comp_reads=state.ctr.comp_reads + rinc,
+        writes=state.ctr.writes + winc,
+        comp_by_boundary=state.ctr.comp_by_boundary.at[boundary].add(1),
+        rate_limited=state.ctr.rate_limited
+        + jnp.sum((mvalid & ~wrote).astype(jnp.int32)),
+    )
+
+    def tset(t, i, v):
+        return t[:i] + (v,) + t[i + 1:]
+
+    new_state = state._replace(
+        keys=tset(tset(state.keys, u, up_keys), l, lo_keys),
+        vals=tset(state.vals, l, lo_vals),
+        runs=tset(tset(state.runs, du, up_runs), dl, lo_runs),
+        tombs=tombs,
+        idx_keys=tset(tset(state.idx_keys, u, uidx_keys), l, lidx_keys),
+        idx_slots=tset(tset(state.idx_slots, u, uidx_slots),
+                       l, lidx_slots),
+        dir_lo=tset(state.dir_lo, dl, ldir_lo),
+        dir_hi=tset(state.dir_hi, dl, ldir_hi),
+        dir_count=tset(tset(state.dir_count, du, udir_cnt),
+                       dl, ldir_cnt),
+        dir_active=tset(tset(state.dir_active, du, udir_act),
+                        dl, ldir_act),
+        dir_blooms=tset(state.dir_blooms, dl, lblooms),
+        ctr=ctr)
+    zero = jnp.zeros((), jnp.int32)
+    stats = CompactionStats(
+        selected_lo=out_lo, selected_hi=out_hi, score=score,
+        n_demoted=zero, n_promoted=zero, n_merged=n_merged,
+        n_superseded=jnp.sum(superseded.astype(jnp.int32)),
+        n_run_read=t_u + t_l, n_run_written=n_merged)
+    if not with_movement:
+        return new_state, stats
+    src_tier = jnp.concatenate([jnp.full_like(uslots, u),
+                                jnp.full_like(lslots, l)])[order]
+    src_slot = jnp.concatenate([uslots, lslots])[order]
+    mv = Movement(
+        m_src_tier=src_tier.astype(jnp.int32),
+        m_src_slot=src_slot.astype(jnp.int32),
+        m_dst_slot=jnp.where(wrote, new_slots, -1).astype(jnp.int32),
+        m_valid=wrote,
+        p_src_slot=jnp.full((cap_lo,), -1, jnp.int32),
+        p_dst_slot=jnp.full((cap_lo,), -1, jnp.int32),
+        p_valid=jnp.zeros((cap_lo,), bool),
+        m_key=mkeys.astype(jnp.int32),
+        boundary=jnp.full((), boundary, jnp.int32))
+    return new_state, stats, mv
+
+
+def tier_over_watermark(state: TierState, cfg: TierConfig,
+                        tier: int) -> jax.Array:
+    """Occupancy trigger of the tier ``tier`` -> ``tier + 1`` boundary
+    (the same §4.2 watermarks apply at every boundary)."""
+    from repro.core.tiers import tier_occupancy
+    return tier_occupancy(state, tier) >= cfg.high_watermark
+
+
+def tier_below_low(state: TierState, cfg: TierConfig,
+                   tier: int) -> jax.Array:
+    from repro.core.tiers import tier_occupancy
+    return tier_occupancy(state, tier) < cfg.low_watermark

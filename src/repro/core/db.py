@@ -27,6 +27,15 @@ from repro.obs.state import ObsConfig
 PART_AXIS = "part"          # mesh axis name for the partition dimension
 
 
+def _sync_obs(obs: ObsConfig | None, cfg: TierConfig) -> ObsConfig:
+    """Keep the obs plane's tier count in lockstep with the tier config
+    (it sizes the timeline rows and the per-boundary job counters)."""
+    obs = obs if obs is not None else ObsConfig()
+    if obs.n_tiers != cfg.n_tiers:
+        obs = obs._replace(n_tiers=cfg.n_tiers)
+    return obs
+
+
 class PrismDB:
     """Single-partition store. Batched Put/Get/Delete/Scan + compaction.
 
@@ -71,7 +80,7 @@ class PrismDB:
             precise=precise, selection=selection, pin_mode=pin_mode,
             append_only=append_only, consolidate_every=consolidate_every,
             backend=backend, interpret=interpret,
-            obs=obs if obs is not None else ObsConfig(),
+            obs=_sync_obs(obs, cfg),
             compaction_quantum=compaction_quantum)
         self.estate = engine.init(self.ecfg, jax.random.PRNGKey(seed))
         self._step = engine.jit_step(self.ecfg)
@@ -166,7 +175,7 @@ class PrismDB:
         """Object-unit counters + derived byte counters (python ints, no
         overflow).  This is a host readback -- introspection only, never on
         the hot path."""
-        c = {k: int(v) for k, v in self.estate.tier.ctr._asdict().items()}
+        c = tiers.counters_dict(self.estate.tier.ctr)
         vb = self.cfg.value_bytes
         c["fast_bytes_read"] = c["fast_reads"] * vb
         c["fast_bytes_written"] = c["fast_writes"] * vb
@@ -306,7 +315,7 @@ class PartitionedDB:
         self.ecfg = EngineConfig(
             tier=cfg, pol=pol_cfg or policy.PolicyConfig(), promote=promote,
             backend=backend, interpret=interpret,
-            obs=obs if obs is not None else ObsConfig(),
+            obs=_sync_obs(obs, cfg),
             compaction_quantum=compaction_quantum,
             mesh_axis=PART_AXIS if self.mesh is not None else None)
         rngs = jax.random.split(jax.random.PRNGKey(seed), n_partitions)
@@ -447,8 +456,8 @@ class PartitionedDB:
 
     @property
     def counters(self) -> dict:
-        return {k: [int(x) for x in v]
-                for k, v in self.estate.tier.ctr._asdict().items()}
+        return tiers.counters_dict(self.estate.tier.ctr,
+                                   partitioned=True)
 
     def obs_snapshot(self) -> dict:
         """Merged cross-partition snapshot: the per-partition histograms

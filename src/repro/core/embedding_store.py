@@ -88,11 +88,11 @@ def init(cfg: EmbedStoreConfig, rng: jax.Array) -> EmbedStoreState:
         blooms = bloom.set_run(blooms, jnp.int32(r), keys, m)
     bucket_slow = jnp.zeros((tcfg.n_buckets,), jnp.int32).at[
         tiers.bucket_of(tcfg, keys)].add(1)
-    tier = tier._replace(slow_keys=slow_keys, slow_run=slow_run,
-                         sidx_keys=sidx_keys, sidx_slots=sidx_slots,
-                         run_lo=run_lo, run_hi=run_hi, run_count=run_count,
-                         run_active=run_active, blooms=blooms,
-                         bucket_slow=bucket_slow)
+    tier = tier.update(slow_keys=slow_keys, slow_run=slow_run,
+                       sidx_keys=sidx_keys, sidx_slots=sidx_slots,
+                       run_lo=run_lo, run_hi=run_hi, run_count=run_count,
+                       run_active=run_active, blooms=blooms,
+                       bucket_slow=bucket_slow)
     rows_slow = (jax.random.normal(rng, (tcfg.slow_slots, cfg.dim))
                  * 0.02).astype(cfg.dtype)
     rows_fast = jnp.zeros((cfg.fast_rows, cfg.dim), cfg.dtype)
@@ -129,7 +129,7 @@ def prepare_batch(state: EmbedStoreState, cfg: EmbedStoreConfig,
     rows_fast = state.rows_fast.at[tgt].set(
         state.rows_slow[jnp.clip(sslot, 0)], mode="drop")
     # charge the host reads (promotion fetch) as slow reads
-    ctr = tier.ctr._replace(
+    ctr = tier.ctr.update(
         slow_reads=tier.ctr.slow_reads + jnp.sum(moved.astype(jnp.int32)))
     tier = tier._replace(ctr=ctr)
 

@@ -246,6 +246,63 @@ def _compact1(state: EngineState, cfg: EngineConfig,
                           payload=payload, obs=obs, comp=comp)
 
 
+def _deep_tick(state: EngineState, cfg: EngineConfig, boundary: int,
+               wm_gate, need: int = 0) -> EngineState:
+    """Watermark hysteresis at one DEEP (run-to-run) boundary >= 1:
+    while tier ``boundary`` sits above the high watermark, migrate its
+    best-scoring run down into tier ``boundary + 1`` until occupancy
+    drops below the low watermark (same §4.2 hysteresis as the slab
+    boundary, bounded by ``max_rounds``).  Only traced when
+    ``cfg.tier.n_tiers > 2`` -- the two-tier graph is untouched.  Deep
+    merges move run rows wholesale, so there is no payload mirror and no
+    §5.3 policy at these boundaries (promotion targets tier i-1 only at
+    the slab boundary).
+
+    ``need`` (static) additionally drains until the tier has that many
+    FREE slots (or is empty): free slots are hard capacity -- a merge
+    landing in a full middle tier drops rows -- so the maintenance loop
+    pre-drains each tier's worst-case single-merge inflow before
+    compacting the boundary above it."""
+    wm0 = wm_gate & compaction.tier_over_watermark(state.tier, cfg.tier,
+                                                   boundary)
+
+    def pressure(s):
+        keys = s.tier.keys[boundary]
+        free = jnp.sum((keys < 0).astype(jnp.int32))
+        return free < need
+
+    def cond(carry):
+        s, rounds = carry
+        # a migratable run must exist: without one the merge is a no-op
+        # and the loop would burn max_rounds doing (counted) nothing
+        can = jnp.any(s.tier.dir_active[boundary - 1])
+        return (rounds < cfg.max_rounds) & can & (
+            (wm0 & ~compaction.tier_below_low(s.tier, cfg.tier, boundary))
+            | pressure(s))
+
+    def body(carry):
+        s, rounds = carry
+        if boundary + 1 < cfg.tier.n_tiers - 1:
+            # the receiving tier is itself a middle tier: give it the
+            # same worst-case headroom first (recursion ends at the
+            # last boundary, whose receiver is the capacity tier)
+            s = _deep_tick(s, cfg, boundary + 1, True,
+                           need=2 * cfg.tier.run_size)
+        tier, stats = compaction.compact_boundary(
+            s.tier, cfg.tier, boundary, cost=cfg.obs.cost)
+        s = s._replace(tier=tier)
+        if cfg.obs.enabled:
+            s = s._replace(obs=obs_plane.record_compaction(
+                s.obs, cfg.obs, step=s.steps,
+                trigger=jnp.int32(obs_plane.TRIG_WATERMARK),
+                stats=stats, boundary=boundary))
+        return s, rounds + 1
+
+    state, _ = lax.while_loop(cond, body,
+                              (state, jnp.zeros((), jnp.int32)))
+    return state
+
+
 def maintenance(state: EngineState, cfg: EngineConfig, *,
                 need: jax.Array | int = 0,
                 wm_gate: jax.Array | bool = True,
@@ -307,11 +364,24 @@ def maintenance(state: EngineState, cfg: EngineConfig, *,
             jnp.where(wm0 & (occ >= cfg.tier.low_watermark),
                       jnp.int32(obs_plane.TRIG_WATERMARK),
                       jnp.int32(obs_plane.TRIG_POLICY)))
-        return (_compact1(s, cfg, mirror, force_pin_keys, trigger=trig),
-                rounds + 1)
+        if cfg.tier.n_tiers > 2:
+            # pre-drain BEFORE the slab merge, deepest boundary first:
+            # free slots (not watermarks) are the hard capacity of a
+            # small middle tier, so each tier is drained to worst-case
+            # single-merge headroom (net inflow <= the upstream window
+            # cap, 2*run_size) before rows can land on it
+            for b in range(cfg.tier.n_tiers - 2, 0, -1):
+                s = _deep_tick(s, cfg, b, True, need=2 * cfg.tier.run_size)
+        s = _compact1(s, cfg, mirror, force_pin_keys, trigger=trig)
+        return (s, rounds + 1)
 
     state, _ = lax.while_loop(cond, body,
                               (state, jnp.zeros((), jnp.int32)))
+    if cfg.tier.n_tiers > 2:
+        # deep boundaries cascade top-down so a slab merge that tips
+        # tier 1 over its watermark drains within the same step
+        for b in range(1, cfg.tier.n_tiers - 1):
+            state = _deep_tick(state, cfg, b, wm_gate)
     return state
 
 

@@ -246,3 +246,45 @@ def select_range(state: TierState, cfg: TierConfig, rng: jax.Array,
                                             probs))(cand.lo, cand.hi,
                                                     cand.t_f)
     return cand, scores, jnp.argmax(scores)
+
+
+# ------------------------------------------------- deep-boundary selection
+
+def select_boundary_run(state: TierState, cfg: TierConfig, boundary: int,
+                        cost=None) -> tuple:
+    """Pick the tier-``boundary`` run to migrate down across the
+    ``boundary`` -> ``boundary + 1`` boundary (deep boundaries only,
+    ``boundary >= 1``).
+
+    Eq. 1's popularity terms do not exist below the slab tier (the clock
+    tracker observes tier-0 accesses), so the deep score degenerates to
+    MSC's benefit/cost core priced with THIS boundary's coefficients:
+
+        score_j = rows_freed_j / (io_us_j + 1)
+        io_us_j = t_u * seq_read(up) + t_l * seq_read(lo)
+                  + (t_u + t_l) * seq_write(lo)
+
+    where ``t_l`` sums the counts of every lower run overlapping run j's
+    range.  Returns ``(rid, lo, hi, score, overlap_mask)`` with
+    ``overlap_mask`` a bool[max_runs] over the LOWER tier's directory.
+    """
+    from repro.obs.cost import CostModel
+    cost = cost if cost is not None else CostModel()
+    du, dl = boundary - 1, boundary
+    up_lo, up_hi = state.dir_lo[du], state.dir_hi[du]
+    up_cnt, up_act = state.dir_count[du], state.dir_active[du]
+    lo_lo, lo_hi = state.dir_lo[dl], state.dir_hi[dl]
+    lo_cnt, lo_act = state.dir_count[dl], state.dir_active[dl]
+    # [U, L] overlap of upper run u's range with lower run l's range
+    ov = (lo_act[None, :]
+          & (lo_lo[None, :] < up_hi[:, None])
+          & (lo_hi[None, :] > up_lo[:, None]))
+    t_l = jnp.sum(jnp.where(ov, lo_cnt[None, :], 0), axis=1) \
+        .astype(jnp.float32)
+    t_u = up_cnt.astype(jnp.float32)
+    cu, cl = cost.tier(boundary), cost.tier(boundary + 1)
+    io = (t_u * cu.seq_read_us_per_obj + t_l * cl.seq_read_us_per_obj
+          + (t_u + t_l) * cl.seq_write_us_per_obj)
+    score = jnp.where(up_act & (up_cnt > 0), t_u / (io + 1.0), -jnp.inf)
+    rid = jnp.argmax(score).astype(jnp.int32)
+    return (rid, up_lo[rid], up_hi[rid], score[rid], ov[rid])

@@ -168,7 +168,7 @@ def append_tokens(state: PagedKVState, cfg: PagedKVConfig,
     fr_tgt = jnp.where(fresh, slot, cfg.fast_pages)
     kmax = kmax.at[:, fr_tgt].set(-big, mode="drop")
     kmin = kmin.at[:, fr_tgt].set(big, mode="drop")
-    ctr = tier.ctr._replace(
+    ctr = tier.ctr.update(
         slow_reads=tier.ctr.slow_reads + jnp.sum(cp.astype(jnp.int32)))
     tier = tier._replace(ctr=ctr)
 

@@ -15,6 +15,13 @@ drift, so PrismDB adds three stages:
 
 Defaults follow the paper: epoch = 1M client ops, improvement threshold 1%,
 cool-down 10M ops (scaled down in simulations via PolicyConfig).
+
+In the N-tier storage plane this machine governs the SLAB boundary only
+(tier 0 <-> tier 1): §5.3 promotion always targets tier i-1, and the
+in-place slab is the only tier with pinned/promotable slots, so deeper
+(run-to-run) boundaries compact purely on §4.2 watermark pressure with
+no read-triggered stage.  The fractions below ("fast", "slow") read
+tiers 0 and 1 of the per-tier counter vectors accordingly.
 """
 from __future__ import annotations
 

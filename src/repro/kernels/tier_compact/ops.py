@@ -77,3 +77,23 @@ def apply_movement_pools(fast, slow, mv, *, pool_axis: int = 0,
     frows, srows = apply_movement_rows(frows, srows, mv, backend=backend,
                                        interpret=interpret)
     return from_rows(frows, fshape), from_rows(srows, sshape)
+
+
+def apply_movement_boundary(pools, mv, boundary: int = 0, *,
+                            backend: str = "reference",
+                            interpret: bool | None = None):
+    """Replay a Movement at one boundary of an N-tier pool LIST.
+
+    ``pools`` is a sequence of flat per-tier row pools [P_t, W] (hottest
+    first); the Movement's coordinates are boundary-relative, exactly as
+    ``compact_boundary`` emits them (``m_src_tier`` 0 = the boundary's
+    upper tier), so the pair kernels apply unchanged to the selected
+    ``(pools[boundary], pools[boundary + 1])`` slice.  Returns the pool
+    list with only those two entries replaced -- at ``boundary=0`` on a
+    two-entry list this is exactly ``apply_movement_rows``.
+    """
+    pools = list(pools)
+    up, lo = apply_movement_rows(pools[boundary], pools[boundary + 1],
+                                 mv, backend=backend, interpret=interpret)
+    pools[boundary], pools[boundary + 1] = up, lo
+    return pools

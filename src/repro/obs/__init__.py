@@ -1,6 +1,6 @@
 """Device-resident observability plane (see ``repro.obs.state``)."""
-from repro.obs.cost import (COST, CostModel, compaction_io_us, drain_io_us,
-                            step_io_us)
+from repro.obs.cost import (CostModel, TierCost, boundary_io_us,
+                            compaction_io_us, drain_io_us, step_io_us)
 from repro.obs.export import (bucket_bounds, bucket_of_us_np, events_table,
                               hist_delta, hist_sum_delta,
                               quantile_from_hist, quantiles_from_hist,
@@ -25,7 +25,8 @@ def __getattr__(name: str):
     raise AttributeError(name)
 
 __all__ = [
-    "COST", "CostModel", "compaction_io_us", "drain_io_us", "step_io_us",
+    "CostModel", "TierCost", "boundary_io_us", "compaction_io_us",
+    "drain_io_us", "step_io_us",
     "bucket_bounds", "bucket_of_us_np", "events_table", "hist_delta",
     "hist_sum_delta", "quantile_from_hist", "quantiles_from_hist",
     "snapshot", "timeline_table", "to_records", "write_jsonl",

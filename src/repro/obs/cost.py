@@ -5,10 +5,21 @@ The constants are STATIC (a hashable NamedTuple inside ``ObsConfig``
 inside ``EngineConfig``), so they key every jit cache and the on-device
 cost arithmetic is closure constants -- never traced values.  The
 attribution mirrors ``benchmarks.harness.io_time_s`` exactly: client
-point ops are random I/O, compaction and range-scan slow reads are
-sequential (runs are key-sorted), and ``fast_write_amp`` models the
-LSM baselines' NVM-internal rewrite work (amp ~ 3 for het-LSM; PrismDB's
-slab layout updates in place, amp = 1).
+point ops are random I/O, compaction and range-scan sequential reads
+walk key-sorted runs, and ``fast_write_amp`` models the LSM baselines'
+NVM-internal rewrite work (amp ~ 3 for het-LSM; PrismDB's slab layout
+updates in place, amp = 1).
+
+There is deliberately NO module-level singleton: the ``CostModel``
+instance rides inside ``ObsConfig`` (and from there ``EngineConfig``),
+so two engines in one process can price their tiers differently.
+
+N-tier pricing: ``CostModel.tiers`` optionally carries one ``TierCost``
+per storage tier.  When empty (the default), the legacy two-tier fields
+resolve to an equivalent two-entry vector -- tier 0 is the random-I/O
+slab tier, tier 1 the run-structured tier whose sequential coefficients
+come from the ``slow_seq_*`` fields -- so every N=2 cost is
+bit-identical to the historical scalar formulas.
 """
 from __future__ import annotations
 
@@ -18,16 +29,45 @@ import jax
 import jax.numpy as jnp
 
 
+class TierCost(NamedTuple):
+    """Per-op service costs of ONE storage tier, in microseconds."""
+    read_us: float            # random 4KB read
+    write_us: float           # random 4KB write
+    seq_read_us_per_obj: float    # sequential run read, per object
+    seq_write_us_per_obj: float   # sequential run write, per object
+
+
 class CostModel(NamedTuple):
-    """Per-op service costs in microseconds (paper Table 1)."""
+    """Per-op service costs in microseconds (paper Table 1).
+
+    The scalar fields describe the classic two-tier Optane/QLC setup and
+    remain the source of truth at N=2; ``tiers`` generalizes to an
+    explicit per-tier vector for N-tier configs (``tier(i)``)."""
     fast_read_us: float = 6.0                # Optane 4KB random read
     fast_write_us: float = 10.0
     slow_read_us: float = 391.0              # QLC 4KB random read
     slow_seq_read_us_per_obj: float = 0.5    # ~2 GB/s sequential, 1KB objs
     slow_seq_write_us_per_obj: float = 1.0   # ~1 GB/s sequential
+    tiers: tuple = ()                        # tuple[TierCost, ...] or ()
 
+    def tier(self, i: int) -> TierCost:
+        """Static (trace-time) resolver of tier ``i``'s coefficients."""
+        if self.tiers:
+            return TierCost(*self.tiers[i])
+        if i == 0:
+            return TierCost(self.fast_read_us, self.fast_write_us,
+                            self.fast_read_us, self.fast_write_us)
+        return TierCost(self.slow_read_us, self.slow_read_us,
+                        self.slow_seq_read_us_per_obj,
+                        self.slow_seq_write_us_per_obj)
 
-COST = CostModel()
+    def resolve(self, n_tiers: int) -> tuple:
+        """``n_tiers``-length TierCost tuple (legacy fields expanded)."""
+        if self.tiers and len(self.tiers) != n_tiers:
+            raise ValueError(
+                f"CostModel.tiers has {len(self.tiers)} entries, "
+                f"engine has {n_tiers} tiers")
+        return tuple(self.tier(i) for i in range(n_tiers))
 
 
 def step_io_us(delta: "Counters", cost: CostModel,  # noqa: F821
@@ -36,34 +76,61 @@ def step_io_us(delta: "Counters", cost: CostModel,  # noqa: F821
     (a ``Counters`` pytree of per-step increments).  All-scalar f32
     arithmetic on i32 deltas: bit-reproducible across backends.
 
-    ``comp_reads`` and ``scan_reads`` are maintained on device as subsets
-    of ``slow_reads``; the remainder is client random reads.
+    ``comp_reads`` and ``scan_reads`` are maintained on device as
+    per-tier subsets of ``reads``; the per-tier remainder is client
+    random reads.  The accumulation order is tier 0's random charges
+    first, then each lower tier's (client, seq-read, seq-write) triple
+    in tier order -- at N=2 this is left-associated exactly like the
+    historical scalar formula, so modeled costs stay float-bit-identical.
     """
-    seq = (delta.comp_reads + delta.scan_reads).astype(jnp.float32)
-    client_slow = jnp.maximum(
-        delta.slow_reads.astype(jnp.float32) - seq, 0.0)
-    return (delta.fast_reads.astype(jnp.float32) * cost.fast_read_us
-            + delta.fast_writes.astype(jnp.float32)
-            * (cost.fast_write_us * fast_write_amp)
-            + client_slow * cost.slow_read_us
-            + seq * cost.slow_seq_read_us_per_obj
-            + delta.slow_writes.astype(jnp.float32)
-            * cost.slow_seq_write_us_per_obj)
+    n = int(delta.hits.shape[-1])
+    c0 = cost.tier(0)
+    total = (delta.reads[..., 0].astype(jnp.float32) * c0.read_us
+             + delta.writes[..., 0].astype(jnp.float32)
+             * (c0.write_us * fast_write_amp))
+    for t in range(1, n):
+        ct = cost.tier(t)
+        seq = (delta.comp_reads[..., t]
+               + delta.scan_reads[..., t]).astype(jnp.float32)
+        client = jnp.maximum(
+            delta.reads[..., t].astype(jnp.float32) - seq, 0.0)
+        total = (total + client * ct.read_us
+                 + seq * ct.seq_read_us_per_obj
+                 + delta.writes[..., t].astype(jnp.float32)
+                 * ct.seq_write_us_per_obj)
+    return total
 
 
 def compaction_io_us(stats: "CompactionStats", cost: CostModel,  # noqa: F821
-                     fast_write_amp: float = 1.0) -> jax.Array:
+                     fast_write_amp: float = 1.0,
+                     boundary: int = 0) -> jax.Array:
     """Modeled I/O microseconds of ONE compaction, attributed exactly as
     ``compact_once`` charges its counters: the run window read + the new
-    runs written are sequential slow I/O; demotions read the fast tier,
-    promotions write it."""
-    return (stats.n_run_read.astype(jnp.float32)
-            * cost.slow_seq_read_us_per_obj
+    runs written are sequential I/O priced with the BOUNDARY's tiers,
+    demotions read the upper tier, promotions write it.  Boundary 0 (the
+    slab/run boundary) prices upper-tier traffic as random I/O -- the
+    historical formula; deeper boundaries are run-to-run, so the upper
+    side is sequential too (``n_demoted``/``n_promoted`` are zero there).
+    """
+    up, lo = cost.tier(boundary), cost.tier(boundary + 1)
+    return (stats.n_run_read.astype(jnp.float32) * lo.seq_read_us_per_obj
             + stats.n_run_written.astype(jnp.float32)
-            * cost.slow_seq_write_us_per_obj
-            + stats.n_demoted.astype(jnp.float32) * cost.fast_read_us
+            * lo.seq_write_us_per_obj
+            + stats.n_demoted.astype(jnp.float32) * up.read_us
             + stats.n_promoted.astype(jnp.float32)
-            * (cost.fast_write_us * fast_write_amp))
+            * (up.write_us * fast_write_amp))
+
+
+def boundary_io_us(n_up_read: jax.Array, n_lo_read: jax.Array,
+                   n_written: jax.Array, cost: CostModel,
+                   boundary: int) -> jax.Array:
+    """Modeled I/O of a DEEP (run-to-run) compaction at ``boundary``:
+    both source windows are sequential run reads priced per tier, and
+    the merged output is a sequential write into the lower tier."""
+    up, lo = cost.tier(boundary), cost.tier(boundary + 1)
+    return (n_up_read.astype(jnp.float32) * up.seq_read_us_per_obj
+            + n_lo_read.astype(jnp.float32) * lo.seq_read_us_per_obj
+            + n_written.astype(jnp.float32) * lo.seq_write_us_per_obj)
 
 
 def drain_io_us(run_read: jax.Array, run_written: jax.Array,
@@ -71,12 +138,13 @@ def drain_io_us(run_read: jax.Array, run_written: jax.Array,
                 cost: CostModel, fast_write_amp: float = 1.0) -> jax.Array:
     """Modeled I/O microseconds of one compaction QUANTUM: the slice of an
     in-flight compaction's physical migration drained this engine step
-    (``repro.core.compaction.drain_quantum``).  Categories mirror
-    ``compaction_io_us`` exactly, so the per-quantum charges of a job sum
-    to the run-to-completion charge once the job commits."""
-    return (run_read.astype(jnp.float32) * cost.slow_seq_read_us_per_obj
-            + run_written.astype(jnp.float32)
-            * cost.slow_seq_write_us_per_obj
-            + fast_read.astype(jnp.float32) * cost.fast_read_us
+    (``repro.core.compaction.drain_quantum``).  Quantized jobs are always
+    boundary-0, so categories mirror ``compaction_io_us(boundary=0)``
+    exactly and the per-quantum charges of a job sum to the
+    run-to-completion charge once the job commits."""
+    up, lo = cost.tier(0), cost.tier(1)
+    return (run_read.astype(jnp.float32) * lo.seq_read_us_per_obj
+            + run_written.astype(jnp.float32) * lo.seq_write_us_per_obj
+            + fast_read.astype(jnp.float32) * up.read_us
             + fast_write.astype(jnp.float32)
-            * (cost.fast_write_us * fast_write_amp))
+            * (up.write_us * fast_write_amp))

@@ -113,6 +113,7 @@ def snapshot(obs: ObsState) -> dict:
     ev_count = np.asarray(host.ev_count).reshape(-1)
     hist_sum = np.asarray(host.hist_sum)
     ev_jobs = np.asarray(host.ev_jobs).reshape(-1)
+    ev_jobs_b = np.asarray(host.ev_jobs_b)
     snap = {
         "hist": hist.sum(axis=0) if stacked else hist,
         "hist_sum": hist_sum.sum(axis=0) if stacked else hist_sum,
@@ -129,6 +130,9 @@ def snapshot(obs: ObsState) -> dict:
         "ev_superseded": np.asarray(host.ev_superseded),
         "ev_io_us": np.asarray(host.ev_io_us),
         "ev_kind": np.asarray(host.ev_kind),
+        "ev_boundary": np.asarray(host.ev_boundary),
+        "ev_jobs_b": (ev_jobs_b.sum(axis=0) if ev_jobs_b.ndim == 2
+                      else ev_jobs_b),
         "n_partitions": hist.shape[0] if stacked else 1,
     }
     return snap
@@ -173,6 +177,8 @@ def events_table(snap: Mapping) -> list:
         sup, io = leaf("ev_superseded"), leaf("ev_io_us")
         kind = (leaf("ev_kind") if "ev_kind" in snap
                 else np.zeros_like(step))
+        bnd = (leaf("ev_boundary") if "ev_boundary" in snap
+               else np.zeros_like(step))
         per = np.asarray(snap.get("ev_count_per_part",
                                   snap["ev_count"])).reshape(-1)
         count = int(per[p]) if per.size > 1 else int(snap["ev_count"])
@@ -182,6 +188,7 @@ def events_table(snap: Mapping) -> list:
                 "step": int(step[i]),
                 "trigger": TRIGGER_NAMES[int(trig[i])],
                 "kind": EVENT_KIND_NAMES[int(kind[i])],
+                "boundary": int(bnd[i]),
                 "msc_score": float(score[i]),
                 "moved": int(moved[i]),
                 "superseded": int(sup[i]),
@@ -191,11 +198,23 @@ def events_table(snap: Mapping) -> list:
 
 
 def timeline_table(snap: Mapping) -> list:
-    """Per-step counter-delta rows (oldest surviving first)."""
-    from repro.obs.state import TIMELINE_FIELDS  # lazy: cycle breaker
+    """Per-step counter-delta rows (oldest surviving first).  Per-tier
+    vector counters appear both expanded ("hits0", "hits1", ...) and as
+    the legacy aggregate names ("hits_fast" = tier 0, "hits_slow" = the
+    sum of every lower tier, ...), so two-tier consumers keep working
+    unchanged against any N."""
+    from repro.obs.state import timeline_fields  # lazy: cycle breaker
     tl = np.asarray(snap["timeline"])
     if tl.ndim == 2:
         tl = tl[None]
+    n_tiers = (tl.shape[-1] - 13) // 6  # width = 13 + 6*T (see state.py)
+    fields = timeline_fields(n_tiers)
+    legacy = {"hits_fast": ("hits", 0), "fast_reads": ("reads", 0),
+              "fast_writes": ("writes", 0), "hits_slow": ("hits", None),
+              "slow_reads": ("reads", None),
+              "slow_writes": ("writes", None),
+              "comp_reads": ("comp_reads", -1),
+              "scan_reads": ("scan_reads", -1)}
     rows = []
     for p in range(tl.shape[0]):
         per = np.asarray(snap.get("t_pos_per_part",
@@ -203,8 +222,12 @@ def timeline_table(snap: Mapping) -> list:
         count = int(per[p]) if per.size > 1 else int(snap["t_pos"])
         for i in _ring_order(count, tl.shape[1]):
             row = {"partition": p}
-            row.update({f: int(v) for f, v in zip(TIMELINE_FIELDS,
-                                                  tl[p, i])})
+            row.update({f: int(v) for f, v in zip(fields, tl[p, i])})
+            for name, (base, t) in legacy.items():
+                vec = [row[f"{base}{j}"] for j in range(n_tiers)]
+                row[name] = (vec[0] if t == 0
+                             else sum(vec[1:]) if t is None
+                             else sum(vec))
             rows.append(row)
     return rows
 

@@ -60,12 +60,26 @@ TRIGGER_NAMES = ("rate_limit", "watermark", "policy")
 EV_COMMIT, EV_START, EV_RESUME = 0, 1, 2
 EVENT_KIND_NAMES = ("commit", "start", "resume")
 
-# timeline row layout: [kind, n_ops, *Counters deltas].  Resolved
-# lazily (module __getattr__) so importing repro.obs does not pull in
-# repro.core before repro.core.engine has finished importing US.
-def _timeline_fields() -> tuple:
+# timeline row layout: [kind, n_ops, *flattened Counters deltas] --
+# per-tier vector counters expand to one column per entry ("hits0",
+# "hits1", ...).  Resolved lazily (module __getattr__) so importing
+# repro.obs does not pull in repro.core before repro.core.engine has
+# finished importing US.
+def timeline_fields(n_tiers: int = 2) -> tuple:
     from repro.core.tiers import Counters
-    return ("kind", "n_ops") + Counters._fields
+    zeros = Counters.zeros(n_tiers)
+    out = ["kind", "n_ops"]
+    for f in Counters._fields:
+        leaf = getattr(zeros, f)
+        if leaf.ndim == 0:
+            out.append(f)
+        else:
+            out.extend(f"{f}{i}" for i in range(leaf.shape[0]))
+    return tuple(out)
+
+
+def _timeline_fields() -> tuple:
+    return timeline_fields(2)
 
 
 def __getattr__(name: str):
@@ -86,6 +100,13 @@ class ObsConfig(NamedTuple):
     cost: CostModel = CostModel()
     fast_write_amp: float = 1.0  # LSM baselines model NVM-internal
                                # rewrites (harness.FAST_WRITE_AMP)
+    n_tiers: int = 2           # sizes the timeline row + per-boundary
+                               # job counters; facades keep it in sync
+                               # with TierConfig.n_tiers
+
+    @property
+    def n_boundaries(self) -> int:
+        return self.n_tiers - 1
 
 
 class ObsState(NamedTuple):
@@ -108,14 +129,20 @@ class ObsState(NamedTuple):
     ev_kind: jax.Array       # i32[event_len] EV_* entry kind
     ev_jobs: jax.Array       # i32: compaction JOBS recorded (one per
                              # trigger; == ev_count when quantum is off)
+    ev_boundary: jax.Array   # i32[event_len] tier boundary of the event
+                             # (0 = slab/run boundary, the legacy pair)
+    ev_jobs_b: jax.Array     # i32[n_boundaries] jobs per boundary
+                             # (sums to ev_jobs; conservation oracle:
+                             # ev_jobs_b[b] == ctr.comp_by_boundary[b])
 
 
 def init(cfg: ObsConfig) -> ObsState:
     e = cfg.event_len
     return ObsState(
         hist=jnp.zeros((N_KINDS, cfg.n_buckets), jnp.int32),
-        timeline=jnp.zeros((cfg.timeline_len, len(_timeline_fields())),
-                           jnp.int32),
+        timeline=jnp.zeros(
+            (cfg.timeline_len, len(timeline_fields(cfg.n_tiers))),
+            jnp.int32),
         t_pos=jnp.zeros((), jnp.int32),
         ev_step=jnp.zeros((e,), jnp.int32),
         ev_trigger=jnp.zeros((e,), jnp.int32),
@@ -127,6 +154,8 @@ def init(cfg: ObsConfig) -> ObsState:
         hist_sum=jnp.zeros((N_KINDS, cfg.n_buckets), jnp.float32),
         ev_kind=jnp.zeros((e,), jnp.int32),
         ev_jobs=jnp.zeros((), jnp.int32),
+        ev_boundary=jnp.zeros((e,), jnp.int32),
+        ev_jobs_b=jnp.zeros((cfg.n_boundaries,), jnp.int32),
     )
 
 
@@ -168,9 +197,9 @@ def record_step(obs: ObsState, cfg: ObsConfig, *, kind: jax.Array,
     hist = obs.hist.at[kind, b].add(n_ops)
     hist_sum = obs.hist_sum.at[kind, b].add(
         per_op * n_ops.astype(jnp.float32))
-    row = jnp.concatenate([
-        jnp.stack([jnp.asarray(kind, jnp.int32), n_ops]),
-        jnp.stack([jnp.asarray(v, jnp.int32) for v in delta])])
+    row = jnp.concatenate(
+        [jnp.stack([jnp.asarray(kind, jnp.int32), n_ops])]
+        + [jnp.atleast_1d(jnp.asarray(v, jnp.int32)) for v in delta])
     timeline = obs.timeline.at[obs.t_pos % cfg.timeline_len].set(row)
     return obs._replace(hist=hist, hist_sum=hist_sum, timeline=timeline,
                         t_pos=obs.t_pos + 1)
@@ -180,7 +209,8 @@ def record_compaction(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
                       trigger: jax.Array,
                       stats: "CompactionStats",  # noqa: F821
                       kind: int = EV_COMMIT, new_job: bool = True,
-                      io_us: jax.Array | None = None) -> ObsState:
+                      io_us: jax.Array | None = None,
+                      boundary: int = 0) -> ObsState:
     """Append one compaction to the event ring (runs INSIDE the
     ``engine.maintenance`` while_loop body -- all scatter-sets, the ring
     index is ``ev_count % event_len``).
@@ -193,7 +223,8 @@ def record_compaction(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
     i = obs.ev_count % cfg.event_len
     moved = stats.n_demoted + stats.n_promoted + stats.n_merged
     if io_us is None:
-        io_us = compaction_io_us(stats, cfg.cost, cfg.fast_write_amp)
+        io_us = compaction_io_us(stats, cfg.cost, cfg.fast_write_amp,
+                                 boundary=boundary)
     return obs._replace(
         ev_step=obs.ev_step.at[i].set(jnp.asarray(step, jnp.int32)),
         ev_trigger=obs.ev_trigger.at[i].set(
@@ -205,8 +236,10 @@ def record_compaction(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
             stats.n_superseded.astype(jnp.int32)),
         ev_io_us=obs.ev_io_us.at[i].set(jnp.asarray(io_us, jnp.float32)),
         ev_kind=obs.ev_kind.at[i].set(jnp.int32(kind)),
+        ev_boundary=obs.ev_boundary.at[i].set(jnp.int32(boundary)),
         ev_count=obs.ev_count + 1,
-        ev_jobs=obs.ev_jobs + (1 if new_job else 0))
+        ev_jobs=obs.ev_jobs + (1 if new_job else 0),
+        ev_jobs_b=obs.ev_jobs_b.at[boundary].add(1 if new_job else 0))
 
 
 def record_drain(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
@@ -236,4 +269,5 @@ def record_drain(obs: ObsState, cfg: ObsConfig, *, step: jax.Array,
         ev_io_us=at(obs.ev_io_us).set(jnp.asarray(io_us, jnp.float32),
                                       mode="drop"),
         ev_kind=at(obs.ev_kind).set(kind, mode="drop"),
+        ev_boundary=at(obs.ev_boundary).set(jnp.int32(0), mode="drop"),
         ev_count=obs.ev_count + write.astype(jnp.int32))

@@ -262,7 +262,8 @@ class ServeEngine:
 
     @property
     def counters(self) -> dict:
-        return {k: int(v) for k, v in self.est.tier.ctr._asdict().items()}
+        from repro.core.tiers import counters_dict
+        return counters_dict(self.est.tier.ctr)
 
     def obs_snapshot(self) -> dict:
         """Host-side snapshot of the device-resident observability plane

@@ -196,7 +196,7 @@ def test_vmapped_states_merge_by_summation():
         obs = obs_state.init(ocfg)
         rng = np.random.default_rng(int(seed))
         for k in range(3):
-            delta = tiers.Counters.zeros()._replace(
+            delta = tiers.Counters.zeros().update(
                 fast_reads=jnp.int32(rng.integers(1, 50)),
                 slow_reads=jnp.int32(rng.integers(0, 20)))
             obs = obs_state.record_step(obs, ocfg, kind=jnp.int32(1),

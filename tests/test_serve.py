@@ -98,14 +98,14 @@ def test_policy_state_machine():
     trk = tracker.access_batched(st.tracker, keys,
                                  jnp.ones(50, jnp.int8), jnp.ones(50, bool))
     st = st._replace(tracker=trk,
-                     ctr=st.ctr._replace(gets=jnp.int32(100),
-                                         puts=jnp.int32(1),
-                                         hits_fast=jnp.int32(10)))
+                     ctr=st.ctr.update(gets=jnp.int32(100),
+                                       puts=jnp.int32(1),
+                                       hits_fast=jnp.int32(10)))
     pol, go = policy.step(pol, st, cfg, jnp.int32(101))
     assert int(pol.phase) == policy.ACTIVE and bool(go)
     # epoch ends with no improvement -> cooldown
-    st2 = st._replace(ctr=st.ctr._replace(gets=jnp.int32(120),
-                                          hits_fast=jnp.int32(11)))
+    st2 = st._replace(ctr=st.ctr.update(gets=jnp.int32(120),
+                                        hits_fast=jnp.int32(11)))
     pol, go = policy.step(pol, st2, cfg, jnp.int32(120))
     assert int(pol.phase) == policy.COOLDOWN
     # cooldown expires -> detect

@@ -1,0 +1,197 @@
+"""N-tier storage plane: N=2 tier-list parity with the legacy pair
+engine (states, results, counters, obs instruments -- bit-identical on
+both backends, any compaction quantum), 3-tier end-to-end execution
+through the fused workload scan with per-boundary event conservation,
+a dict oracle across deep compactions, and per-tier cost threading."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import workloads as W
+from repro.core import PrismDB, TierConfig, engine, tiers
+from repro.obs.cost import CostModel, TierCost
+from repro.obs.state import ObsConfig
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+CFG2 = TierConfig(key_space=1 << 12, fast_slots=256, slow_slots=1 << 11,
+                  value_width=2, max_runs=64, run_size=128,
+                  bloom_bits_per_run=1 << 12, tracker_slots=1 << 10,
+                  n_buckets=32, pin_threshold=0.1)
+
+# explicit per-tier cost vector resolved FROM the legacy scalars: the
+# tier-list engine must price every op with the exact same coefficients
+_BASE = CostModel()
+COST2 = CostModel(tiers=(_BASE.tier(0), _BASE.tier(1)))
+
+CFG3 = TierConfig(key_space=1 << 11, fast_slots=128, slow_slots=1 << 10,
+                  value_width=2, max_runs=32, run_size=64,
+                  bloom_bits_per_run=1 << 12, tracker_slots=1 << 9,
+                  n_buckets=32, pin_threshold=0.1,
+                  tier_slots=(128, 256, 1 << 10))
+COST3 = CostModel(tiers=(TierCost(0.2, 0.2, 0.2, 0.2),
+                         TierCost(6.0, 10.0, 0.5, 1.0),
+                         TierCost(391.0, 391.0, 0.5, 1.0)))
+
+
+def _stream(seed: int, cfg: TierConfig, n_batches: int = 10,
+            batch: int = 48):
+    """Mixed random op stream stacked for ``run_ops`` (one dispatch)."""
+    rng = np.random.default_rng(seed)
+    kinds = [engine.PUT, engine.PUT, engine.GET, engine.DELETE,
+             engine.SCAN]
+    ops = []
+    for i in range(n_batches):
+        kind = engine.PUT if i == 0 else kinds[int(rng.integers(5))]
+        keys = rng.integers(0, cfg.key_space, batch).astype(np.int32)
+        aux = rng.integers(1, 16, batch).astype(np.int32)
+        ops.append(engine.make_op(kind, keys, aux=aux,
+                                  value_width=cfg.value_width))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ops)
+
+
+def _assert_trees_equal(a, b, label: str):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{label} leaf {i} diverged")
+
+
+def _check_n2_parity(backend: str, quantum: int, seed: int):
+    """tier_slots=(fast, slow) + explicit cost vector must be bit-
+    identical to the legacy pair config: per-op results, final tier
+    state, counters, and every obs instrument."""
+    ops = _stream(seed, CFG2)
+    legacy = PrismDB(CFG2, seed=3, backend=backend,
+                     obs=ObsConfig(), compaction_quantum=quantum)
+    listed = PrismDB(
+        CFG2._replace(tier_slots=(CFG2.fast_slots, CFG2.slow_slots)),
+        seed=3, backend=backend, obs=ObsConfig(cost=COST2),
+        compaction_quantum=quantum)
+    res_a = legacy.run_ops(ops)
+    res_b = listed.run_ops(ops)
+    _assert_trees_equal(res_a, res_b, "OpResult")
+    _assert_trees_equal(legacy.state, listed.state, "TierState")
+    snap_a, snap_b = legacy.obs_snapshot(), listed.obs_snapshot()
+    for k in ("hist", "hist_sum", "timeline", "ev_step", "ev_trigger",
+              "ev_score", "ev_moved", "ev_io_us", "ev_kind",
+              "ev_boundary", "ev_jobs_b"):
+        np.testing.assert_array_equal(np.asarray(snap_a[k]),
+                                      np.asarray(snap_b[k]),
+                                      err_msg=f"obs[{k}] diverged")
+    assert snap_a["ev_jobs"] == snap_b["ev_jobs"]
+
+
+@pytest.mark.parametrize("backend,quantum", [
+    ("reference", 0), ("reference", 3),
+    ("pallas", 0), ("pallas", 3),
+])
+def test_n2_tier_list_bit_identical_to_legacy(backend, quantum):
+    _check_n2_parity(backend, quantum, seed=0)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=hst.integers(min_value=1, max_value=2 ** 16))
+    def test_n2_parity_random_streams(seed):
+        # same config -> compiled once, each example replays cheaply
+        _check_n2_parity("reference", 0, seed)
+else:                                                 # pragma: no cover
+    @pytest.mark.parametrize("seed", [1, 2, 3])
+    def test_n2_parity_random_streams(seed):
+        _check_n2_parity("reference", 0, seed)
+
+
+def test_three_tier_runs_workload_with_boundary_conservation():
+    """A 3-tier config runs end-to-end through the fused workload scan;
+    every compaction event lands on a boundary and per-boundary event
+    counts match the engine's per-boundary commit counters."""
+    db = PrismDB(CFG3, seed=0, obs=ObsConfig(cost=COST3))
+    # preload enough keys to flood tiers 0 and 1 into tier 2
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        db.put(rng.integers(0, CFG3.key_space, 100).astype(np.int32))
+    db.reset_workload(seed=1)
+    db.run_workload(W.ycsb("A"), 16, 64)
+    ctr = db.state.ctr
+    snap = db.obs_snapshot()
+    cbb = np.asarray(ctr.comp_by_boundary)
+    np.testing.assert_array_equal(np.asarray(snap["ev_jobs_b"]), cbb,
+                                  err_msg="per-boundary events != "
+                                          "per-boundary commits")
+    assert snap["ev_jobs"] == int(ctr.compactions)
+    assert int(cbb.sum()) == int(ctr.compactions)
+    assert cbb[0] > 0, "slab boundary never compacted"
+    assert cbb[1] > 0, "deep boundary never compacted"
+    assert int(ctr.hits[0]) > 0
+    # occupancy respects every tier's capacity
+    for t, cap in enumerate(CFG3.tier_sizes):
+        occ = int(tiers.tier_occupancy(db.state, t))
+        assert 0 <= occ <= cap
+
+
+def test_three_tier_dict_oracle_through_deep_compactions():
+    """Point ops against a 3-tier store match a host dict even after
+    rows migrate through the middle tier: updates supersede, deletes'
+    tombstones propagate to the last tier, misses stay misses."""
+    db = PrismDB(CFG3, seed=0)
+    oracle = {}
+    rng = np.random.default_rng(7)
+    for r in range(6):
+        keys = rng.integers(0, CFG3.key_space, 100).astype(np.int32)
+        vals = np.repeat((keys + r * 10_000).astype(np.float32)[:, None],
+                         CFG3.value_width, axis=1)
+        db.put(keys, vals)
+        for k, v in zip(keys, vals):       # last write wins inside batch
+            oracle[int(k)] = v
+    dels = rng.choice(np.asarray(sorted(oracle), np.int32), 40,
+                      replace=False).astype(np.int32)
+    db.delete(dels)
+    for k in dels:
+        oracle.pop(int(k), None)
+    # force more boundary traffic after the deletes, then check all keys
+    more = rng.integers(0, CFG3.key_space, 100).astype(np.int32)
+    db.put(more)
+    for k in more:
+        oracle[int(k)] = np.full((CFG3.value_width,), float(k),
+                                 np.float32)
+    assert int(db.state.ctr.comp_by_boundary[1]) > 0
+    probe = np.arange(CFG3.key_space, dtype=np.int32)
+    for lo in range(0, CFG3.key_space, 128):
+        ks = probe[lo:lo + 128]
+        vals, found, _ = db.get(ks)
+        for j, k in enumerate(ks):
+            want = oracle.get(int(k))
+            assert bool(found[j]) == (want is not None), (
+                f"key {int(k)}: found={bool(found[j])} "
+                f"oracle={'hit' if want is not None else 'miss'}")
+            if want is not None:
+                np.testing.assert_allclose(np.asarray(vals[j]), want,
+                                           err_msg=f"key {int(k)}")
+
+
+def test_cost_vectors_price_engines_differently():
+    """Two engines over the same ops but different per-tier cost
+    coefficients must produce different modeled-latency mass: the cost
+    model is config-carried, not a process-global."""
+    ops = _stream(11, CFG2, n_batches=6)
+    cheap = PrismDB(CFG2, seed=0, obs=ObsConfig(cost=COST2))
+    dear = CostModel(tiers=(TierCost(60.0, 100.0, 60.0, 100.0),
+                            TierCost(3910.0, 3910.0, 5.0, 10.0)))
+    pricey = PrismDB(CFG2, seed=0, obs=ObsConfig(cost=dear))
+    cheap.run_ops(ops)
+    pricey.run_ops(ops)
+    a = float(np.asarray(cheap.obs_snapshot()["hist_sum"]).sum())
+    b = float(np.asarray(pricey.obs_snapshot()["hist_sum"]).sum())
+    assert a > 0 and b > 0
+    assert b > a * 2, (a, b)
+    # identical data-plane outcome regardless of pricing
+    _assert_trees_equal(cheap.state, pricey.state, "TierState")
